@@ -1,0 +1,58 @@
+"""Paper Fig. 7: per-kernel bandwidth under symmetric thread scaling
+(n threads per kernel, n = 1 .. domain/2) — model vs. queue simulator.
+
+Also reports the paper's qualitative scaling observations: CLX scales well
+from 2 to 4 threads; Rome nearly saturates with one thread per kernel.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import memsim, sharing, table2
+
+PAIRINGS = [("DCOPY", "DDOT2"), ("JacobiL3-v1", "DDOT1"),
+            ("STREAM", "JacobiL2-v1")]
+DOMAIN = {"BDW-1": 10, "BDW-2": 18, "CLX": 20, "ROME": 8}
+
+
+def curve(arch, ka, kb):
+    a, b = table2.kernel(ka), table2.kernel(kb)
+    pts = []
+    for n in range(1, DOMAIN[arch] // 2 + 1):
+        pred = sharing.pair(a, b, arch, n, n, utilization="queue")
+        sim = memsim.simulate([sharing.Group.of(a, arch, n),
+                               sharing.Group.of(b, arch, n)],
+                              n_events=20_000)
+        pts.append((n, pred.bw_per_core, (sim[0] / n, sim[1] / n)))
+    return pts
+
+
+def rows():
+    out = []
+    for arch in DOMAIN:
+        for ka, kb in PAIRINGS:
+            t0 = time.perf_counter()
+            pts = curve(arch, ka, kb)
+            us = (time.perf_counter() - t0) * 1e6 / len(pts)
+            series = "|".join(
+                f"n={n}:model=({m[0]:.1f},{m[1]:.1f})"
+                f":sim=({s[0]:.1f},{s[1]:.1f})" for n, m, s in pts)
+            out.append((f"fig7/{arch}/{ka}+{kb}", us, series))
+    # Qualitative checks from the paper text.
+    rome = curve("ROME", "DCOPY", "DDOT2")
+    one_thread_total = sum(rome[0][1]) * 1
+    sat = table2.kernel("DCOPY").bs["ROME"]
+    out.append(("fig7/check/rome_one_thread_near_saturation", 0.0,
+                f"total@n=1={one_thread_total:.1f};bs={sat:.1f};"
+                f"ratio={one_thread_total/sat:.2f}"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

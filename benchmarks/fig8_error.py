@@ -1,0 +1,65 @@
+"""Paper Fig. 8: modeling-error overview — 30+ pairings x 4 architectures,
+symmetric scaling.  Error = |(b_sim - b_model) / b_model| per kernel per
+configuration; we report median / p75 / max per architecture, matching the
+paper's box-plot summary (paper: <8% globally, <5% for 75% of cases)."""
+
+from __future__ import annotations
+
+import itertools
+import statistics
+import time
+
+from repro.core import memsim, sharing, table2
+
+DOMAIN = {"BDW-1": 10, "BDW-2": 18, "CLX": 20, "ROME": 8}
+
+
+def errors_for(arch: str, n_events=20_000):
+    n_dom = DOMAIN[arch]
+    errs = []
+    pairs = list(itertools.combinations(table2.FIG9_KERNELS, 2))  # 45 > 30
+    for ka, kb in pairs:
+        a, b = table2.kernel(ka), table2.kernel(kb)
+        for n in (2, n_dom // 4, n_dom // 2):
+            if n == 0:
+                continue
+            pred = sharing.pair(a, b, arch, n, n, utilization="queue")
+            sim = memsim.simulate([sharing.Group.of(a, arch, n),
+                                   sharing.Group.of(b, arch, n)],
+                                  n_events=n_events)
+            for i in range(2):
+                model = pred.bw_per_core[i]
+                errs.append(abs(sim[i] / n - model) / model)
+    return errs
+
+
+def rows():
+    out = []
+    all_errs = []
+    for arch in DOMAIN:
+        t0 = time.perf_counter()
+        errs = errors_for(arch)
+        us = (time.perf_counter() - t0) * 1e6 / len(errs)
+        all_errs += errs
+        q3 = statistics.quantiles(errs, n=4)[2]
+        out.append((f"fig8/{arch}", us,
+                    f"n={len(errs)};median={statistics.median(errs)*100:.1f}%"
+                    f";p75={q3*100:.1f}%;max={max(errs)*100:.1f}%"))
+    q3 = statistics.quantiles(all_errs, n=4)[2]
+    frac5 = sum(e < 0.05 for e in all_errs) / len(all_errs)
+    frac8 = sum(e < 0.08 for e in all_errs) / len(all_errs)
+    out.append(("fig8/GLOBAL", 0.0,
+                f"n={len(all_errs)};median="
+                f"{statistics.median(all_errs)*100:.2f}%;p75={q3*100:.1f}%;"
+                f"max={max(all_errs)*100:.1f}%;<5%={frac5*100:.0f}%;"
+                f"<8%={frac8*100:.0f}%;paper=max8%_p75-5%"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

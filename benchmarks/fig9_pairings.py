@@ -1,0 +1,64 @@
+"""Paper Fig. 9: relative bandwidth gain/loss of kernel A paired with B
+(equal thread split of the full domain), normalized to A self-paired.
+
+Checks the paper's headline qualitative claims:
+  * gain/loss sign follows the f-ratio, consistently across Intel CPUs;
+  * CLX shows the smallest variations;
+  * Rome differs for DAXPY+DSCAL because f_DAXPY > f_DSCAL there (reversed
+    vs. Intel).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import sharing, table2
+
+DOMAIN = {"BDW-1": 10, "BDW-2": 18, "CLX": 20, "ROME": 8}
+
+
+def gain_matrix(arch):
+    n = DOMAIN[arch] // 2
+    out = {}
+    for ka in table2.FIG9_KERNELS:
+        for kb in table2.FIG9_KERNELS:
+            out[(ka, kb)] = sharing.gain_vs_self(
+                table2.kernel(ka), table2.kernel(kb), arch, n)
+    return out
+
+
+def rows():
+    out = []
+    spreads = {}
+    for arch in DOMAIN:
+        t0 = time.perf_counter()
+        m = gain_matrix(arch)
+        us = (time.perf_counter() - t0) * 1e6 / len(m)
+        gains = [v for (a, b), v in m.items() if a != b]
+        spreads[arch] = max(gains) - min(gains)
+        ex = m[("DCOPY", "DDOT2")]
+        out.append((f"fig9/{arch}", us,
+                    f"pairs={len(m)};min={min(gains):.3f};"
+                    f"max={max(gains):.3f};DCOPY+DDOT2={ex:.3f}"))
+    intel = ("BDW-1", "BDW-2", "CLX")
+    clx_smallest = spreads["CLX"] == min(spreads[a] for a in intel)
+    dax_dscal_rome = sharing.gain_vs_self(
+        table2.kernel("DAXPY"), table2.kernel("DSCAL"), "ROME", 4)
+    dax_dscal_bdw = sharing.gain_vs_self(
+        table2.kernel("DAXPY"), table2.kernel("DSCAL"), "BDW-1", 5)
+    out.append(("fig9/check/clx_smallest_variation", 0.0,
+                f"{clx_smallest};spreads="
+                + ";".join(f"{a}={spreads[a]:.3f}" for a in spreads)))
+    out.append(("fig9/check/daxpy_dscal_rome_flip", 0.0,
+                f"rome_gain={dax_dscal_rome:.3f}(>1 expected);"
+                f"bdw_gain={dax_dscal_bdw:.3f}(<1 expected)"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Render the dry-run roofline table (EXPERIMENTS.md §Roofline) from
+results/dryrun*.jsonl.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def load(paths=None):
+    recs = {}
+    for path in sorted(paths or glob.glob("results/dryrun*.jsonl")):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+                       r.get("variant", "baseline"))
+                recs[key] = r  # last write wins (reruns supersede)
+    return recs
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def table(recs, mesh="single"):
+    rows = []
+    hdr = ("| arch | shape | T_comp | T_mem | T_coll | dominant | "
+           "MODEL/HLO flop | roofline frac | HBM/dev | fits |")
+    sep = "|" + "---|" * 10
+    rows.append(hdr)
+    rows.append(sep)
+    for (arch, shape, m, variant), r in sorted(recs.items()):
+        if m != mesh or variant != "baseline":
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {arch} | {shape} | - | - | - | skipped | - | - "
+                        f"| - | {r.get('reason','')[:40]} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {arch} | {shape} | - | - | - | ERROR | - | - "
+                        f"| - | {r.get('error','')[:40]} |")
+            continue
+        rows.append(
+            f"| {arch} | {shape} | {fmt_s(r['t_compute_s'])} "
+            f"| {fmt_s(r['t_memory_s'])} | {fmt_s(r['t_collective_s'])} "
+            f"| {r['dominant']} | {r['useful_flop_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['bytes_per_device_est']/2**30:.2f}GiB "
+            f"| {'yes' if r.get('fits_hbm') else 'NO'} |")
+    return "\n".join(rows)
+
+
+def summary(recs):
+    ok = [r for r in recs.values() if r["status"] == "ok"]
+    skipped = [r for r in recs.values() if r["status"] == "skipped"]
+    err = [r for r in recs.values() if r["status"] == "error"]
+    lines = [f"cells: ok={len(ok)} skipped={len(skipped)} "
+             f"errors={len(err)} total={len(recs)}"]
+    for r in err:
+        lines.append(f"  ERROR {r['arch']}/{r['shape']}/{r['mesh']}: "
+                     f"{r.get('error','')[:120]}")
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    lines.append(f"dominant terms: {doms}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    args = ap.parse_args()
+    recs = load()
+    print(summary(recs))
+    print()
+    print(table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

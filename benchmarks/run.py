@@ -1,0 +1,47 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV to stdout.  Run with:
+    PYTHONPATH=src python -m benchmarks.run [--only fig8]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (fig6_full_domain, fig7_symmetric, fig8_error, fig9_pairings,
+               hpcg_desync, table2_kernels, tpu_overlap)
+
+MODULES = {
+    "table2": table2_kernels,
+    "fig6": fig6_full_domain,
+    "fig7": fig7_symmetric,
+    "fig8": fig8_error,
+    "fig9": fig9_pairings,
+    "hpcg": hpcg_desync,
+    "tpu_overlap": tpu_overlap,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(MODULES), default=None)
+    args = ap.parse_args()
+    mods = {args.only: MODULES[args.only]} if args.only else MODULES
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, mod in mods.items():
+        try:
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{key}/ERROR,0.0,{traceback.format_exc(limit=1)!r}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Benchmark for paper Table II: kernel characterization.
+
+For each kernel of the suite: wall-time per call of the jnp implementation
+on this host (µs), plus the derived model quantities — element transfers,
+code balance, (f, b_s) per architecture, and the single-core bandwidth
+``f·b_s`` the sharing model consumes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import table2
+from repro.kernels import ops
+
+N = 1 << 20  # 1M doubles-worth of work (f32 here)
+
+_MAP_INPUTS = {
+    "DSCAL": ("dscal", 1), "DAXPY": ("daxpy", 2), "ADD": ("add", 2),
+    "STREAM": ("stream", 2), "WAXPBY": ("waxpby", 2), "DCOPY": ("dcopy", 1),
+    "Schoenauer": ("schoenauer", 3),
+}
+_REDUCE_INPUTS = {
+    "vectorSUM": ("vectorsum", 1), "DDOT1": ("ddot1", 1),
+    "DDOT2": ("ddot2", 2), "DDOT3": ("ddot3", 3),
+}
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    rng = np.random.default_rng(0)
+    arrays = [jnp.asarray(rng.standard_normal(N), jnp.float32)
+              for _ in range(3)]
+    out = []
+    for name, spec in table2.TABLE2.items():
+        if name in _MAP_INPUTS:
+            op, k = _MAP_INPUTS[name]
+            s = jnp.asarray([0.5, 1.5], jnp.float32) if op == "waxpby" \
+                else jnp.asarray(0.5, jnp.float32)
+            us = _time(lambda *a: ops.stream_map(op, s, *a), *arrays[:k])
+        elif name in _REDUCE_INPUTS:
+            op, k = _REDUCE_INPUTS[name]
+            us = _time(lambda *a: ops.stream_reduce(op, *a), *arrays[:k])
+        else:  # stencils
+            grid = jnp.asarray(rng.standard_normal((1024, 1024)),
+                               jnp.float32)
+            if name.endswith("v1"):
+                us = _time(lambda g: ops.jacobi_v1(g, 0.25), grid)
+            else:
+                f = jnp.asarray(rng.standard_normal((1024, 1024)),
+                                jnp.float32)
+                us = _time(lambda g, ff: ops.jacobi_v2(
+                    g, ff, ax=0.4, ay=0.6, b1=2.0, relax=0.9)[0], grid, f)
+        bc = spec.code_balance
+        derived = ";".join(
+            f"{a}:f={spec.f[a]:.3f}:bs={spec.bs[a]:.1f}"
+            f":b1={spec.single_core_bw(a):.1f}" for a in table2.ARCHS)
+        out.append((f"table2/{name}", us,
+                    f"transfers={spec.elem_transfers};Bc={bc:.2f};{derived}"))
+    return out
+
+
+def main():
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Bandwidth-sharing deep dive: Fig. 6/7/9 scenarios + the TPU transplant.
+
+Run:  PYTHONPATH=src python examples/bandwidth_sharing.py
+"""
+
+from repro.core import sharing, table2
+from repro.core.overlap import Phase, overlap_pair
+from repro.runtime.overlap_schedule import plan_gradient_overlap
+from repro.core.hlo import RooflineTerms
+
+print("=" * 70)
+print("1. Full-domain sweep (paper Fig. 6): DCOPY vs DDOT2 on CLX")
+print("=" * 70)
+dcopy, ddot2 = table2.kernel("DCOPY"), table2.kernel("DDOT2")
+print(f"{'n_DCOPY':>8} {'n_DDOT2':>8} {'bw/core A':>10} {'bw/core B':>10} "
+      f"{'total':>8}")
+for na in range(2, 20, 3):
+    p = sharing.pair(dcopy, ddot2, "CLX", na, 20 - na)
+    print(f"{na:>8} {20-na:>8} {p.bw_per_core[0]:>10.2f} "
+          f"{p.bw_per_core[1]:>10.2f} {p.total_bw:>8.1f}")
+print("-> DCOPY (higher f) wins per-core share; total sags toward DCOPY's "
+      "lower b_s (the Fig. 6 'bend').")
+
+print()
+print("=" * 70)
+print("2. Fig. 9 gain/loss: who profits from co-scheduling?")
+print("=" * 70)
+for arch in table2.ARCHS:
+    g1 = sharing.gain_vs_self(table2.kernel("DAXPY"),
+                              table2.kernel("DSCAL"), arch, 4)
+    print(f"  {arch:6s}: DAXPY paired with DSCAL -> {g1:.3f}x "
+          f"({'gain' if g1 > 1 else 'loss'})")
+print("-> sign flips on Rome (f_DAXPY > f_DSCAL there) — paper Sect. V.")
+
+print()
+print("=" * 70)
+print("3. TPU transplant: gradient reduce-scatter vs backward compute")
+print("=" * 70)
+# A training step whose roofline came out of the dry-run:
+terms = RooflineTerms(name="example", t_compute=0, t_memory=0,
+                      t_collective=0, flops=2.0e13, hbm_bytes=4.0e12,
+                      wire_bytes=1.5e10)
+plan = plan_gradient_overlap(terms)
+print(f"  serial step        : {plan.t_serial*1e3:8.2f} ms")
+print(f"  naive 'free' overlap: {plan.t_naive_roofline*1e3:8.2f} ms "
+      "(classical roofline promise)")
+print(f"  sharing-model plan : {plan.t_planned*1e3:8.2f} ms with "
+      f"{plan.n_buckets} buckets (overlap={plan.overlap})")
+
+print()
+print("  Two HBM-bound streams (the case the naive model gets wrong):")
+a, b = Phase("a", hbm_bytes=5e9), Phase("b", hbm_bytes=5e9)
+pr = overlap_pair(a, b)
+print(f"    serial {pr.t_serial*1e3:.2f} ms | shared {pr.t_overlap*1e3:.2f}"
+      f" ms | naive {pr.t_naive*1e3:.2f} ms")
+print("    -> overlapping two saturating streams buys nothing; Eq. 4/5 "
+      "predict it, max() does not.")

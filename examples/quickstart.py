@@ -1,0 +1,31 @@
+"""Quickstart: the paper's bandwidth-sharing model in 40 lines.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import memsim, sharing, table2
+
+# Two kernels sharing a fully-populated 20-core Cascade Lake socket:
+# DCOPY on 12 cores, DDOT2 on 8.
+dcopy = table2.kernel("DCOPY")
+ddot2 = table2.kernel("DDOT2")
+
+print(f"DCOPY : f={dcopy.f['CLX']:.3f}  b_s={dcopy.bs['CLX']:.1f} GB/s")
+print(f"DDOT2 : f={ddot2.f['CLX']:.3f}  b_s={ddot2.bs['CLX']:.1f} GB/s")
+
+pred = sharing.pair(dcopy, ddot2, "CLX", 12, 8)
+print(f"\nEq.4 mixed envelope : {pred.b_overlap:.1f} GB/s")
+print(f"Eq.5 request shares : alpha = {pred.alphas[0]:.3f} / "
+      f"{pred.alphas[1]:.3f}")
+print(f"per-core bandwidth  : DCOPY {pred.bw_per_core[0]:.2f}  "
+      f"DDOT2 {pred.bw_per_core[1]:.2f} GB/s")
+
+# Validate against the microscopic queue simulator (the stand-in for the
+# paper's LIKWID measurements).
+sim = memsim.simulate([sharing.Group.of(dcopy, "CLX", 12),
+                       sharing.Group.of(ddot2, "CLX", 8)])
+print(f"queue simulator     : DCOPY {sim[0]/12:.2f}  DDOT2 {sim[1]/8:.2f} "
+      "GB/s per core")
+err = max(abs(sim[0] / 12 - pred.bw_per_core[0]) / pred.bw_per_core[0],
+          abs(sim[1] / 8 - pred.bw_per_core[1]) / pred.bw_per_core[1])
+print(f"model error         : {err*100:.1f}%  (paper: < 8%)")

@@ -1,0 +1,44 @@
+"""Architecture registry: one module per assigned architecture."""
+
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ModelConfig, MoeConfig, ShapeConfig
+
+# The 10 assigned architectures (the dry-run / roofline matrix).
+ARCH_IDS = (
+    "recurrentgemma-2b",
+    "qwen2-0.5b",
+    "qwen2.5-32b",
+    "qwen1.5-32b",
+    "nemotron-4-15b",
+    "mamba2-1.3b",
+    "internvl2-26b",
+    "olmoe-1b-7b",
+    "granite-moe-1b-a400m",
+    "whisper-tiny",
+)
+
+# The paper's own kernel suite, selectable as --arch paper-stream.
+PAPER_SUITE = "paper-stream"
+ALL_IDS = ARCH_IDS + (PAPER_SUITE,)
+
+
+def _module(arch: str):
+    return importlib.import_module(
+        f".{arch.replace('-', '_').replace('.', '_')}", __package__)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ALL_IDS:
+        raise KeyError(f"unknown arch {arch!r}; available: {ALL_IDS}")
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).reduced()
+
+
+__all__ = ["ARCH_IDS", "ALL_IDS", "PAPER_SUITE", "SHAPES", "ModelConfig",
+           "MoeConfig", "ShapeConfig", "get_config", "get_reduced"]

@@ -1,0 +1,136 @@
+"""Model/run configuration shared by all architectures.
+
+One dataclass covers every assigned family; family-specific fields are
+ignored by the others.  Each ``configs/<arch>.py`` exports:
+  CONFIG     — the exact published configuration,
+  reduced()  — a tiny same-family config for CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None         # default d_model // n_heads
+    act: Literal["swiglu", "sq_relu", "gelu", "geglu"] = "swiglu"
+    qkv_bias: bool = False
+    norm: Literal["rmsnorm", "layernorm"] = "rmsnorm"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    moe: MoeConfig | None = None
+
+    # --- SSM (mamba2 / SSD) ---
+    ssm_state: int = 0                  # N (state size); 0 => not an SSM
+    ssm_chunk: int = 256                # SSD chunk length
+    ssm_expand: int = 2                 # d_inner = expand * d_model
+    ssm_heads: int = 0                  # SSD heads (d_inner / head_dim)
+
+    # --- hybrid (recurrentgemma) ---
+    block_pattern: tuple[str, ...] = ()  # e.g. ("rec", "rec", "attn")
+    local_window: int = 0                # local attention window
+    lru_width: int = 0                   # RG-LRU width (defaults d_model)
+
+    # --- encoder-decoder (whisper) ---
+    enc_layers: int = 0
+    n_audio_frames: int = 1500           # stub frontend output length
+
+    # --- VLM (internvl) ---
+    n_patches: int = 0                   # stub ViT patch count prepended
+
+    # --- numerics / execution ---
+    dtype: str = "bfloat16"              # activation/compute dtype
+    param_dtype: str = "float32"
+    remat: bool = True                   # checkpoint each layer in training
+    remat_policy: str = "nothing"        # "nothing" | "dots" (save matmuls)
+    use_scan: bool = True                # lax.scan over layers
+    kernels: Literal["jnp", "pallas", "interpret"] = "jnp"
+    logits_softcap: float = 0.0
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence mixing: SSM and local-attention hybrids."""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Approximate parameter count N (embedding included once)."""
+        d, L = self.d_model, self.n_layers
+        hd = self.head_dim_
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        if self.family == "ssm":
+            d_in = self.ssm_expand * d
+            per = (d * (2 * d_in + 2 * self.ssm_state)  # in_proj approx
+                   + d_in * d + d_in * 2 * self.ssm_state)
+            return emb + L * per
+        attn = d * hd * (self.n_heads + 2 * self.kv_heads) + \
+            self.n_heads * hd * d
+        if self.moe is not None:
+            ff = 3 * d * self.moe.d_ff_expert * self.moe.n_experts \
+                + d * self.moe.n_experts
+        else:
+            n_mats = 3 if self.act in ("swiglu", "geglu") else 2
+            ff = n_mats * d * self.d_ff
+        layers = L * (attn + ff)
+        if self.family == "encdec":
+            layers += self.enc_layers * (attn + ff) + L * attn  # cross-attn
+        return emb + layers
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: only routed experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        hd = self.head_dim_
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * (self.n_heads + 2 * self.kv_heads) + \
+            self.n_heads * hd * d
+        ff = 3 * d * self.moe.d_ff_expert * self.moe.top_k \
+            + d * self.moe.n_experts
+        return emb + L * (attn + ff)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}

@@ -1,0 +1,29 @@
+"""granite-moe-1b-a400m [moe]: 32 experts, top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]"""
+
+import dataclasses
+
+from .base import ModelConfig, MoeConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    n_layers=24,
+    d_model=1024,
+    n_heads=16,
+    kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    act="swiglu",
+    head_dim=64,
+    moe=MoeConfig(n_experts=32, top_k=8, d_ff_expert=512),
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=64,
+        vocab=512, head_dim=16,
+        moe=MoeConfig(n_experts=4, top_k=2, d_ff_expert=64),
+        remat=False, dtype="float32")

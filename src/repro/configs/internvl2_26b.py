@@ -1,0 +1,26 @@
+"""internvl2-26b [vlm]: InternViT (stub frontend) + InternLM2 backbone.
+[arXiv:2404.16821; hf] — the assignment specifies the transformer BACKBONE
+only; input_specs() provides precomputed patch embeddings."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    act="swiglu",
+    n_patches=1024,        # stub ViT patch embeddings prepended
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+        vocab=512, n_patches=8, remat=False, dtype="float32")

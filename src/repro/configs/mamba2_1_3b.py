@@ -1,0 +1,28 @@
+"""mamba2-1.3b [ssm]: SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified]"""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=1,             # unused (attention-free)
+    kv_heads=1,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_chunk=256,
+    ssm_expand=2,
+    ssm_heads=64,          # d_inner 4096 / head_dim 64
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=3, d_model=64, vocab=512, ssm_state=16,
+        ssm_chunk=32, ssm_heads=4, remat=False, dtype="float32")

@@ -1,0 +1,25 @@
+"""nemotron-4-15b [dense]: GQA kv=8, squared-ReLU MLP.
+[arXiv:2402.16819; unverified]"""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    kv_heads=8,
+    d_ff=24576,
+    vocab=256000,
+    act="sq_relu",
+    norm="layernorm",
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=192,
+        vocab=512, remat=False, dtype="float32")

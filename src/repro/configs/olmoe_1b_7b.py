@@ -1,0 +1,25 @@
+"""olmoe-1b-7b [moe]: 64 experts, top-8.  [arXiv:2409.02060; hf]"""
+
+import dataclasses
+
+from .base import ModelConfig, MoeConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    kv_heads=16,
+    d_ff=1024,
+    vocab=50304,
+    act="swiglu",
+    moe=MoeConfig(n_experts=64, top_k=8, d_ff_expert=1024),
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=4, d_ff=64,
+        vocab=512, moe=MoeConfig(n_experts=8, top_k=2, d_ff_expert=64),
+        remat=False, dtype="float32")

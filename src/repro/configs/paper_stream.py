@@ -1,0 +1,24 @@
+"""paper-stream: the paper's own Table II kernel suite packaged as a
+selectable 'architecture' — running it on TPU calibrates (f, b_s) for the
+HBM interface exactly as the paper calibrated its x86 domains."""
+
+import dataclasses
+
+from .base import ModelConfig
+
+# Not a transformer; fields are placeholders.  The launch path special-cases
+# family via name == "paper-stream" (see launch/dryrun.py).
+CONFIG = ModelConfig(
+    name="paper-stream",
+    family="dense",
+    n_layers=0,
+    d_model=0,
+    n_heads=1,
+    kv_heads=1,
+    d_ff=0,
+    vocab=0,
+)
+
+
+def reduced() -> ModelConfig:
+    return CONFIG

@@ -1,0 +1,26 @@
+"""qwen1.5-32b [dense]: full MHA KV (kv=40), QKV bias.
+[hf:Qwen/Qwen1.5-32B; hf]"""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    kv_heads=40,
+    d_ff=27392,
+    vocab=152064,
+    act="swiglu",
+    qkv_bias=True,
+    rope_theta=1e6,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=4, d_ff=160,
+        vocab=512, remat=False, dtype="float32")

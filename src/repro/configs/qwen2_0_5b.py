@@ -1,0 +1,27 @@
+"""qwen2-0.5b [dense]: GQA kv=2, QKV bias, tied embeddings.
+[arXiv:2407.10671; hf]"""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-0.5b",
+    family="dense",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    kv_heads=2,
+    d_ff=4864,
+    vocab=151936,
+    act="swiglu",
+    qkv_bias=True,
+    tie_embeddings=True,
+    rope_theta=1e6,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=128,
+        vocab=512, remat=False, dtype="float32")

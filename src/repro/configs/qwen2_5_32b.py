@@ -1,0 +1,25 @@
+"""qwen2.5-32b [dense]: GQA kv=8, QKV bias.  [hf:Qwen/Qwen2.5-32B; hf]"""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    kv_heads=8,
+    d_ff=27648,
+    vocab=152064,
+    act="swiglu",
+    qkv_bias=True,
+    rope_theta=1e6,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, kv_heads=2, d_ff=160,
+        vocab=512, remat=False, dtype="float32")

@@ -1,0 +1,31 @@
+"""recurrentgemma-2b [hybrid]: RG-LRU + local attention, 1:2 pattern.
+[arXiv:2402.19427; hf]"""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    n_heads=10,
+    kv_heads=1,            # MQA
+    d_ff=7680,
+    vocab=256000,
+    head_dim=256,
+    act="geglu",
+    block_pattern=("rec", "rec", "attn"),
+    local_window=2048,
+    lru_width=2560,
+    tie_embeddings=True,
+    logits_softcap=30.0,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=5, d_model=64, n_heads=2, kv_heads=1, d_ff=128,
+        vocab=512, head_dim=32, local_window=16, lru_width=64, remat=False,
+        dtype="float32")

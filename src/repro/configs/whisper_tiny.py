@@ -1,0 +1,28 @@
+"""whisper-tiny [audio]: enc-dec, conv frontend STUBBED (input_specs provides
+precomputed frame embeddings).  [arXiv:2212.04356; unverified]"""
+
+import dataclasses
+
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    n_layers=4,            # decoder layers
+    enc_layers=4,
+    d_model=384,
+    n_heads=6,
+    kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    act="gelu",
+    norm="layernorm",
+    n_audio_frames=1500,
+    tie_embeddings=True,
+)
+
+
+def reduced() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, enc_layers=2, d_model=64, n_heads=2, kv_heads=2,
+        d_ff=128, vocab=512, n_audio_frames=64, remat=False, dtype="float32")

@@ -1,0 +1,25 @@
+"""Core of the reproduction: the paper's analytic bandwidth-sharing model
+(Afzal, Hager, Wellein 2020) and its TPU-native applications.
+
+Public API:
+  machine   — Table I machine models + TPU v5e chip model
+  table2    — Table II kernel suite (f, b_s per architecture)
+  ecm       — ECM single-core model (Eqs. 1–3) + multicore scaling
+  sharing   — bandwidth-sharing model (Eqs. 4–5), N-group generalized
+  memsim    — microscopic queue-level simulator (validation instrument)
+  desync    — rank-level discrete-event desynchronization simulator
+  overlap   — overlap-aware TPU step model (compute/collective HBM sharing)
+  hlo       — collective-traffic parsing + roofline terms from compiled HLO
+"""
+
+from . import desync, ecm, hlo, machine, memsim, overlap, sharing, table2
+from .machine import BDW1, BDW2, CLX, ROME, TPU_V5E, MachineModel, TpuModel
+from .sharing import Group, SharePrediction, pair, predict
+from .table2 import ARCHS, FIG9_KERNELS, TABLE2, KernelSpec, kernel
+
+__all__ = [
+    "desync", "ecm", "hlo", "machine", "memsim", "overlap", "sharing",
+    "table2", "BDW1", "BDW2", "CLX", "ROME", "TPU_V5E", "MachineModel",
+    "TpuModel", "Group", "SharePrediction", "pair", "predict", "ARCHS",
+    "FIG9_KERNELS", "TABLE2", "KernelSpec", "kernel",
+]

@@ -1,0 +1,275 @@
+"""Rank-level discrete-event simulator of barrier-free bulk-synchronous
+programs on a shared contention domain — the "new kind of MPI simulation
+technique that can take node-level bottlenecks into account" the paper's
+outlook calls for, and the engine behind the HPCG desynchronization study
+(paper Figs. 1 and 3).
+
+Each rank executes a program: a sequence of memory-bound kernel work items,
+collectives, neighbor waits, and idle gaps.  At every instant, the set of
+in-flight kernels across ranks forms groups; the sharing model (Eqs. 4–5)
+dictates each rank's bandwidth and hence its progress rate.  Desync or resync
+emerges from the dynamics — nothing about skew is put in by hand.
+
+The same engine doubles as the TPU straggler model: ranks = data-parallel
+workers, kernels = step phases, allreduce = the gradient reduction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+from typing import Sequence
+
+from .sharing import Group, predict
+from .table2 import TABLE2, KernelSpec
+
+EPS = 1e-15
+
+
+# --------------------------------------------------------------------------
+# Program description
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Work:
+    """Memory-bound loop kernel moving ``bytes`` over the interface."""
+    kernel: str           # key into core.table2.TABLE2 (or custom specs)
+    bytes: float
+    tag: str = ""         # label for reporting (e.g. "DDOT2")
+
+
+@dataclasses.dataclass(frozen=True)
+class Allreduce:
+    """Global collective: blocks until every rank reaches it."""
+    cost_s: float = 5e-6
+    tag: str = "allreduce"
+
+
+@dataclasses.dataclass(frozen=True)
+class WaitNeighbors:
+    """Point-to-point dependency: blocks until both neighbor ranks have
+    retired at least as many program items as this rank (halo exchange)."""
+    cost_s: float = 2e-6
+    tag: str = "p2p"
+
+
+@dataclasses.dataclass(frozen=True)
+class Idle:
+    """Fixed-duration delay (noise / injected perturbation)."""
+    duration_s: float
+    tag: str = "idle"
+
+
+Item = Work | Allreduce | WaitNeighbors | Idle
+
+
+@dataclasses.dataclass
+class Record:
+    rank: int
+    index: int
+    tag: str
+    start: float
+    end: float
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+
+# --------------------------------------------------------------------------
+# Simulator
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _RankState:
+    program: Sequence[Item]
+    pc: int = 0
+    remaining_bytes: float = 0.0
+    ready_at: float = 0.0       # for Idle / collective cost
+    blocked: bool = False       # waiting on allreduce / neighbors
+    started_current: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.pc >= len(self.program)
+
+    def current(self) -> Item | None:
+        return None if self.done else self.program[self.pc]
+
+
+class DesyncSimulator:
+    """Event-driven co-execution of per-rank programs on one domain."""
+
+    def __init__(self, programs: Sequence[Sequence[Item]], arch: str,
+                 specs: dict[str, KernelSpec] | None = None):
+        self.programs = programs
+        self.arch = arch
+        self.specs = dict(TABLE2 if specs is None else specs)
+        self.records: list[Record] = []
+
+    def _group_of(self, kernel: str, n: int) -> Group:
+        spec = self.specs[kernel]
+        return Group.of(spec, self.arch, n)
+
+    def run(self, *, t_max: float = 10.0) -> list[Record]:
+        ranks = [_RankState(program=p) for p in self.programs]
+        n = len(ranks)
+        t = 0.0
+        self.records = []
+
+        def begin_item(r: int, now: float) -> None:
+            st = ranks[r]
+            st.started_current = now
+            item = st.current()
+            if isinstance(item, Work):
+                st.remaining_bytes = item.bytes
+            elif isinstance(item, Idle):
+                st.ready_at = now + item.duration_s
+            elif isinstance(item, (Allreduce, WaitNeighbors)):
+                st.blocked = True
+
+        def finish_item(r: int, now: float) -> None:
+            st = ranks[r]
+            item = st.current()
+            tag = item.tag or getattr(item, "kernel", type(item).__name__)
+            self.records.append(
+                Record(rank=r, index=st.pc, tag=tag,
+                       start=st.started_current, end=now))
+            st.pc += 1
+            st.blocked = False
+            if not st.done:
+                begin_item(r, now)
+
+        for r in range(n):
+            if ranks[r].program:
+                begin_item(r, 0.0)
+
+        while t < t_max and not all(st.done for st in ranks):
+            # -- resolve collectives: if every non-done rank is blocked at an
+            # Allreduce with the same tag position, release them together.
+            resolved = self._resolve_allreduce(ranks, t, finish_item)
+            resolved |= self._resolve_neighbors(ranks, t, finish_item)
+            if resolved:
+                continue  # re-evaluate doneness/groups after retirements
+
+            # -- group working ranks by kernel
+            working: dict[str, list[int]] = defaultdict(list)
+            for r, st in enumerate(ranks):
+                it = st.current()
+                if isinstance(it, Work) and not st.blocked:
+                    working[it.kernel].append(r)
+
+            # -- progress rates from the sharing model
+            rates: dict[int, float] = {}
+            if working:
+                names = sorted(working)
+                groups = [self._group_of(k, len(working[k])) for k in names]
+                pred = predict(groups)
+                for k, bw_core in zip(names, pred.bw_per_core):
+                    for r in working[k]:
+                        rates[r] = bw_core * 1e9  # bytes/s
+
+            # -- find the next event time
+            dt = math.inf
+            for r, st in enumerate(ranks):
+                it = st.current()
+                if it is None:
+                    continue
+                if isinstance(it, Work) and r in rates and rates[r] > 0:
+                    dt = min(dt, st.remaining_bytes / rates[r])
+                elif isinstance(it, Idle):
+                    dt = min(dt, max(st.ready_at - t, 0.0))
+            if not math.isfinite(dt):
+                # Only blocked ranks remain but no collective resolved — a
+                # genuine deadlock in the program description.
+                raise RuntimeError(
+                    f"desync simulator deadlock at t={t:.6f}s: "
+                    f"pcs={[st.pc for st in ranks]}")
+            dt = max(dt, EPS)
+            t += dt
+
+            # -- advance work and retire finished items
+            for r, st in enumerate(ranks):
+                it = st.current()
+                if isinstance(it, Work) and r in rates:
+                    st.remaining_bytes -= rates[r] * dt
+                    if st.remaining_bytes <= EPS * max(1.0, it.bytes):
+                        finish_item(r, t)
+                elif isinstance(it, Idle) and t >= st.ready_at - EPS:
+                    finish_item(r, t)
+
+        return self.records
+
+    # -- collective resolution ------------------------------------------------
+
+    def _resolve_allreduce(self, ranks, t, finish_item) -> bool:
+        blocked = [(r, st) for r, st in enumerate(ranks)
+                   if isinstance(st.current(), Allreduce) and st.blocked]
+        if not blocked:
+            return False
+        # MPI semantics: the collective is over the full communicator — a
+        # rank that already exited can never participate again.
+        if len(blocked) == len(ranks):
+            cost = max(st.current().cost_s for _, st in blocked)
+            for r, _ in blocked:
+                finish_item(r, t + cost)
+            return True
+        return False
+
+    def _resolve_neighbors(self, ranks, t, finish_item) -> bool:
+        n = len(ranks)
+        progressed = True
+        any_resolved = False
+        while progressed:
+            progressed = False
+            for r, st in enumerate(ranks):
+                it = st.current()
+                if not (isinstance(it, WaitNeighbors) and st.blocked):
+                    continue
+                nbrs = [x for x in (r - 1, r + 1) if 0 <= x < n]
+                if all(ranks[x].pc >= st.pc or ranks[x].done for x in nbrs):
+                    finish_item(r, t + it.cost_s)
+                    progressed = True
+                    any_resolved = True
+        return any_resolved
+
+
+# --------------------------------------------------------------------------
+# Analysis helpers
+# --------------------------------------------------------------------------
+
+
+def durations_by_tag(records: Sequence[Record], tag: str) -> list[float]:
+    """Accumulated time per rank spent in items with ``tag``."""
+    acc: dict[int, float] = defaultdict(float)
+    for rec in records:
+        if rec.tag == tag:
+            acc[rec.rank] += rec.duration
+    return [acc[r] for r in sorted(acc)]
+
+
+def skewness(xs: Sequence[float]) -> float:
+    """Fisher skewness of a sample; the paper's desync/resync indicator
+    (positive → desynchronization amplified; negative → resynchronization)."""
+    n = len(xs)
+    if n < 3:
+        return 0.0
+    mean = sum(xs) / n
+    m2 = sum((x - mean) ** 2 for x in xs) / n
+    m3 = sum((x - mean) ** 3 for x in xs) / n
+    if m2 <= 0:
+        return 0.0
+    return m3 / m2 ** 1.5
+
+
+def start_spread(records: Sequence[Record], tag: str) -> float:
+    starts = [r.start for r in records if r.tag == tag]
+    return max(starts) - min(starts) if starts else 0.0
+
+
+def end_spread(records: Sequence[Record], tag: str) -> float:
+    ends = [r.end for r in records if r.tag == tag]
+    return max(ends) - min(ends) if ends else 0.0

@@ -1,0 +1,192 @@
+"""HLO-level analysis: collective-traffic extraction and roofline terms.
+
+``compiled.cost_analysis()`` reports flops and HBM bytes but *not* collective
+traffic, so we parse the (optimized) HLO text and account every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Two byte accountings are produced per collective:
+  * ``operand_bytes`` — the plain sum of operand tensor sizes (the
+    specification-level number), and
+  * ``wire_bytes``    — per-device link traffic under a ring/bidirectional
+    schedule (all-gather: out·(G−1)/G; reduce-scatter: in·(G−1)/G;
+    all-reduce: 2·in·(G−1)/G; all-to-all: in·(G−1)/G; permute: in),
+which is what the collective roofline term should charge against ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Iterable
+
+from .machine import TPU_V5E, TpuModel
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  f32[256,1024]{1,0}  or bf16[8,128] or f32[] (scalar)
+_SHAPE_RE = re.compile(r"\b([a-z]{1,4}\d*[a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:  # iota v2 form: [num_groups,group_size]
+        return max(1, int(m.group(2)))
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).split("}")[0].strip("{} ")
+        if first:
+            return max(1, len(first.split(",")))
+    return default
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveStats:
+    counts: dict[str, int]
+    operand_bytes: dict[str, int]
+    wire_bytes: dict[str, float]
+
+    @property
+    def total_operand_bytes(self) -> int:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+def collective_stats(hlo_text: str, *, default_group: int = 1
+                     ) -> CollectiveStats:
+    """Scan HLO text and accumulate collective traffic per op kind."""
+    counts: Counter[str] = Counter()
+    op_bytes: Counter[str] = Counter()
+    wire: Counter[str] = Counter()
+
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # Match instruction lines: "%name = <shape> <op>(" or fusion-root
+        # "<shape> <op>(".  Skip "-start/-done" duplicates (count -start).
+        op = None
+        for cand in _COLLECTIVES:
+            if re.search(rf"[=)\s]\s*{cand}(-start)?\(", s):
+                if f"{cand}-done" in s:
+                    op = None
+                else:
+                    op = cand
+                break
+        if op is None:
+            continue
+        shapes = _SHAPE_RE.findall(s)
+        if not shapes:
+            continue
+        # First shape token is the result (possibly a tuple element); operand
+        # shapes follow inside the parens.  Heuristic: result = first, operands
+        # = shapes appearing after the op name.
+        opidx = s.find(op + "(")
+        if opidx < 0:
+            opidx = s.find(op + "-start(")
+        head = s[:opidx]
+        res_shapes = _SHAPE_RE.findall(head)
+        operand_shapes = _SHAPE_RE.findall(s[opidx:])
+        result_b = sum(_shape_bytes(d, dims) for d, dims in res_shapes)
+        operand_b = sum(_shape_bytes(d, dims) for d, dims in operand_shapes)
+        g = _group_size(s, default_group)
+        ring = (g - 1) / g if g > 1 else 0.0
+
+        counts[op] += 1
+        op_bytes[op] += operand_b
+        if op == "all-gather":
+            wire[op] += result_b * ring
+        elif op == "reduce-scatter":
+            wire[op] += operand_b * ring
+        elif op == "all-reduce":
+            wire[op] += 2.0 * operand_b * ring
+        elif op == "all-to-all":
+            wire[op] += operand_b * ring
+        else:  # collective-permute
+            wire[op] += operand_b
+
+    return CollectiveStats(counts=dict(counts), operand_bytes=dict(op_bytes),
+                           wire_bytes=dict(wire))
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """The three roofline terms (seconds) for one compiled step on one chip."""
+
+    name: str
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops: float              # HLO flops per chip
+    hbm_bytes: float          # HLO bytes per chip
+    wire_bytes: float         # collective bytes per chip
+    model_flops: float = 0.0  # 6·N·D-style useful flops per chip
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute fraction of the bound: how close the step is to the
+        hardware roofline if perfectly overlapped."""
+        if self.t_bound <= 0 or self.model_flops <= 0:
+            return 0.0
+        t_useful = self.t_compute * (
+            self.model_flops / self.flops if self.flops else 0.0)
+        return t_useful / self.t_bound
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+
+def roofline_terms(name: str, cost: dict, stats: CollectiveStats,
+                   *, n_chips: int, model_flops_total: float = 0.0,
+                   tpu: TpuModel = TPU_V5E) -> RooflineTerms:
+    """Build the three-term roofline from ``compiled.cost_analysis()`` plus
+    collective stats.  The compiled module is the SPMD per-device program,
+    so cost_analysis flops/bytes and HLO collective bytes are PER-DEVICE
+    already; only ``model_flops_total`` (a global figure) is divided down.
+    """
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    wire = stats.total_wire_bytes  # already per-device (HLO is SPMD)
+    return RooflineTerms(
+        name=name,
+        t_compute=flops / tpu.peak_flops_bf16,
+        t_memory=hbm / (tpu.hbm_bw_gbs * 1e9),
+        t_collective=wire / (tpu.ici_links * tpu.ici_link_gbs * 1e9),
+        flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+        model_flops=model_flops_total / n_chips,
+    )

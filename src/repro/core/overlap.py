@@ -1,0 +1,160 @@
+"""Overlap-aware TPU step model — the paper's bandwidth-sharing idea applied
+to a TPU chip's HBM interface.
+
+The classical three-term roofline ``max(T_comp, T_mem, T_coll)`` assumes the
+collective's HBM drain is free; serial addition assumes no overlap at all.
+This module interpolates with the paper's model: when a compute phase overlaps
+with a collective whose send/recv buffers also stream through HBM, both are
+"kernels" contending for HBM bandwidth.  Each phase's memory request fraction
+is ``f = T_hbm / T_phase`` (the TPU analogue of ECM Eq. 2); the collective's
+HBM stream has ``f ≈ 1`` while it is ICI-bound (DMA continuously drains).
+
+Used by runtime/overlap_schedule.py to decide whether overlapping a gradient
+reduce-scatter with backward compute is a win, and with what bucket size.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .machine import TPU_V5E, TpuModel
+from .sharing import Group, predict
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One schedulable unit of a step (e.g. 'bwd matmul L17', 'grad RS')."""
+
+    name: str
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    ici_bytes: float = 0.0
+
+    def times(self, tpu: TpuModel = TPU_V5E) -> tuple[float, float, float]:
+        t_c = self.flops / tpu.peak_flops_bf16
+        t_m = self.hbm_bytes / (tpu.hbm_bw_gbs * 1e9)
+        t_i = self.ici_bytes / (tpu.ici_links * tpu.ici_link_gbs * 1e9)
+        return t_c, t_m, t_i
+
+    def t_solo(self, tpu: TpuModel = TPU_V5E) -> float:
+        """Roofline time of the phase running alone on the chip."""
+        return max(self.times(tpu))
+
+    def request_fraction(self, tpu: TpuModel = TPU_V5E) -> float:
+        """f = T_hbm / T_phase — how hungry this phase is for HBM while it
+        runs (paper Eq. 2 with T_phase playing T_ECM)."""
+        t = self.t_solo(tpu)
+        if t <= 0:
+            return 0.0
+        return min(1.0, self.times(tpu)[1] / t)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPrediction:
+    t_serial: float      # phases run back-to-back
+    t_overlap: float     # phases co-scheduled, HBM shared per the model
+    t_naive: float       # max(t_a, t_b): the "perfect overlap" assumption
+
+    @property
+    def gain_vs_serial(self) -> float:
+        return self.t_serial / self.t_overlap if self.t_overlap else 1.0
+
+    @property
+    def worthwhile(self) -> bool:
+        return self.t_overlap < self.t_serial * 0.995
+
+
+def _hbm_shared_rates(active: Sequence[Phase], tpu: TpuModel
+                      ) -> list[float]:
+    """Per-phase progress rate (fraction of solo speed) while co-scheduled.
+
+    HBM is arbitrated by the paper's model: each phase is a Group with
+    n=1 (one DMA/load stream agent), f from Eq. 2, and b_s = HBM bandwidth
+    (the envelope does not vary by stream kind on TPU: Eq. 4 degenerates to
+    b_s).  A phase's non-HBM legs (MXU time, ICI time) are unaffected; its
+    HBM leg stretches by 1/share.
+    """
+    groups = [Group(n=1, f=p.request_fraction(tpu), bs=tpu.hbm_bw_gbs,
+                    name=p.name) for p in active]
+    pred = predict(groups)
+    rates = []
+    for p, bw in zip(active, pred.bw_group):
+        t_c, t_m, t_i = p.times(tpu)
+        solo = p.t_solo(tpu)
+        if solo <= 0:
+            rates.append(1.0)
+            continue
+        if p.hbm_bytes <= 0:
+            t_m_shared = 0.0
+        elif bw > 0:
+            t_m_shared = p.hbm_bytes / (bw * 1e9)
+        else:
+            t_m_shared = float("inf")
+        stretched = max(t_c, t_m_shared, t_i)
+        rates.append(solo / stretched if stretched > 0 else 1.0)
+    return rates
+
+
+def overlap_pair(a: Phase, b: Phase, tpu: TpuModel = TPU_V5E
+                 ) -> OverlapPrediction:
+    """Co-schedule two phases; event-step until both complete."""
+    t_serial = a.t_solo(tpu) + b.t_solo(tpu)
+    t_naive = max(a.t_solo(tpu), b.t_solo(tpu))
+
+    remaining = {p.name: p.t_solo(tpu) for p in (a, b)}
+    tol = {p.name: max(p.t_solo(tpu) * 1e-9, 1e-18) for p in (a, b)}
+    phases = {p.name: p for p in (a, b)}
+    t = 0.0
+    while remaining:
+        active = [phases[k] for k in sorted(remaining)]
+        rates = _hbm_shared_rates(active, tpu)
+        # time to first completion at current rates
+        dt = min(remaining[p.name] / r if r > 0 else float("inf")
+                 for p, r in zip(active, rates))
+        if not (dt < float("inf")):
+            break  # nothing can progress (degenerate zero-work phases)
+        t += dt
+        done = []
+        for p, r in zip(active, rates):
+            remaining[p.name] -= r * dt
+            if remaining[p.name] <= tol[p.name]:
+                done.append(p.name)
+        for k in done:
+            del remaining[k]
+    return OverlapPrediction(t_serial=t_serial, t_overlap=t, t_naive=t_naive)
+
+
+def best_bucket_count(compute: Phase, collective: Phase, *,
+                      max_buckets: int = 32, tpu: TpuModel = TPU_V5E
+                      ) -> tuple[int, float]:
+    """Choose how many buckets to split ``collective`` into so that each
+    bucket overlaps the tail of ``compute`` (classic DDP bucketing, but sized
+    with the sharing model instead of assuming free overlap).
+
+    Returns (n_buckets, predicted step time).  n_buckets == 0 means "do not
+    overlap — run the collective after compute".
+    """
+    t_serial = compute.t_solo(tpu) + collective.t_solo(tpu)
+    best = (0, t_serial)
+    for nb in (1, 2, 4, 8, 16, max_buckets):
+        if nb > max_buckets:
+            break
+        # Bucket i of the collective overlaps the last (nb-i)/nb of compute:
+        # approximate by overlapping the whole collective with the whole
+        # compute but with the collective's first bucket delayed; with equal
+        # buckets the pipeline behaves like pair-overlap plus one bucket of
+        # exposed tail.
+        bucket = Phase(collective.name + f"/b{nb}",
+                       flops=collective.flops / nb,
+                       hbm_bytes=collective.hbm_bytes / nb,
+                       ici_bytes=collective.ici_bytes / nb)
+        pair_pred = overlap_pair(compute, Phase(
+            collective.name + "/body",
+            flops=collective.flops * (nb - 1) / nb,
+            hbm_bytes=collective.hbm_bytes * (nb - 1) / nb,
+            ici_bytes=collective.ici_bytes * (nb - 1) / nb), tpu)
+        t = pair_pred.t_overlap + bucket.t_solo(tpu)
+        if t < best[1]:
+            best = (nb, t)
+    return best

@@ -1,0 +1,140 @@
+"""THE PAPER'S CONTRIBUTION: the analytic bandwidth-sharing model (Eqs. 4–5).
+
+Given groups of threads concurrently executing different memory-bound loop
+kernels on one contention domain, predict the memory-bandwidth share each
+group (and each core) attains.  Inputs per group: thread count ``n``, memory
+request fraction ``f``, and homogeneous saturated bandwidth ``b_s``.
+
+The model generalizes naturally from the paper's two groups to N groups —
+the request-proportional arbitration (Eq. 5) and the thread-weighted
+saturation envelope (Eq. 4) are both linear in the groups.  We use the
+N-group form throughout (the desync simulator routinely has >2 distinct
+kernels in flight).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .ecm import scaling_curve
+from .table2 import KernelSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    """One group of threads all executing the same kernel."""
+
+    n: int          # number of threads
+    f: float        # memory request fraction of the kernel (Eq. 2/3)
+    bs: float       # saturated bandwidth of the kernel, homogeneous run
+    name: str = ""
+
+    @staticmethod
+    def of(kernel: KernelSpec, arch: str, n: int) -> "Group":
+        return Group(n=n, f=kernel.f[arch], bs=kernel.bs[arch],
+                     name=kernel.name)
+
+
+@dataclasses.dataclass(frozen=True)
+class SharePrediction:
+    groups: tuple[Group, ...]
+    b_overlap: float            # Eq. 4 saturation envelope [GB/s]
+    alphas: tuple[float, ...]   # Eq. 5 request shares, sum to 1
+    bw_group: tuple[float, ...]  # attained bandwidth per group [GB/s]
+
+    @property
+    def bw_per_core(self) -> tuple[float, ...]:
+        return tuple(b / g.n if g.n else 0.0
+                     for b, g in zip(self.bw_group, self.groups))
+
+    @property
+    def total_bw(self) -> float:
+        return sum(self.bw_group)
+
+
+def overlapped_saturated_bw(groups: Sequence[Group]) -> float:
+    """Paper Eq. (4): thread-weighted mean of homogeneous saturated bws."""
+    n_tot = sum(g.n for g in groups)
+    if n_tot == 0:
+        return 0.0
+    return sum(g.n * g.bs for g in groups) / n_tot
+
+
+def request_shares(groups: Sequence[Group]) -> tuple[float, ...]:
+    """Paper Eq. (5): share of requests (hence bandwidth) per group."""
+    weights = [g.n * g.f for g in groups]
+    tot = sum(weights)
+    if tot == 0.0:
+        return tuple(0.0 for _ in groups)
+    return tuple(w / tot for w in weights)
+
+
+def predict(groups: Sequence[Group], *, saturated: bool | None = None,
+            utilization: str | float = "recursion",
+            p0_factor: float = 0.5) -> SharePrediction:
+    """Bandwidth share per group.
+
+    The envelope is ``U(n_t; f̄) · b(mix)``: the Eq. 4 mix envelope scaled by
+    the interface utilization at the *mean* request fraction
+    ``f̄ = Σ nᵢfᵢ / n_t``.  At saturation U → 1 and the model is exactly
+    Eqs. 4–5; below saturation each group's share degrades to its demand
+    (paper Sect. IV: the model "can also be applied to the nonsaturated
+    case").
+
+    ``utilization`` selects the sub-saturation law:
+      * ``"recursion"`` — the paper's simplified latency-penalty recursion
+        (Hofmann et al.), penalty ``p0 = p0_factor · T_Mem`` (paper uses
+        p0_factor = 1/2; the full model fits it per machine).  Soft knee,
+        matches real hardware (paper Fig. 7).
+      * ``"queue"`` — ideal work-conserving interface, ``U = min(1, f̄·n_t)``.
+        Hard knee, matches the idealized queue instrument (core/memsim.py).
+      * a float — externally calibrated utilization.
+    ``saturated=True`` forces U = 1.
+    """
+    groups = tuple(groups)
+    b = overlapped_saturated_bw(groups)
+    alphas = request_shares(groups)
+    n_tot = sum(g.n for g in groups)
+
+    util = 1.0
+    if saturated is not True and n_tot > 0:
+        f_mean = sum(g.n * g.f for g in groups) / n_tot
+        if isinstance(utilization, (int, float)):
+            util = float(utilization)
+        elif utilization == "queue":
+            util = min(1.0, f_mean * n_tot)
+        elif f_mean > 0:
+            util = scaling_curve(f_mean, t_mem=f_mean, t_ecm=1.0,
+                                 n_max=n_tot, p0_factor=p0_factor)[n_tot - 1]
+    bw = tuple(a * util * b for a in alphas)
+
+    return SharePrediction(groups=groups, b_overlap=b, alphas=alphas,
+                           bw_group=bw)
+
+
+def pair(kernel_a: KernelSpec, kernel_b: KernelSpec, arch: str,
+         n_a: int, n_b: int, **kwargs) -> SharePrediction:
+    """Convenience: the paper's two-kernel scenario on architecture ``arch``."""
+    return predict([Group.of(kernel_a, arch, n_a),
+                    Group.of(kernel_b, arch, n_b)], **kwargs)
+
+
+def gain_vs_self(kernel_a: KernelSpec, kernel_b: KernelSpec, arch: str,
+                 n_each: int) -> float:
+    """Paper Fig. 9 bar height: relative bandwidth gain/loss of kernel A when
+    paired with B (each on ``n_each`` cores), normalized to A self-paired."""
+    mixed = pair(kernel_a, kernel_b, arch, n_each, n_each)
+    homo = pair(kernel_a, kernel_a, arch, n_each, n_each)
+    return mixed.bw_group[0] / homo.bw_group[0]
+
+
+def runtime(groups: Sequence[Group], work_bytes: Sequence[float]
+            ) -> tuple[float, ...]:
+    """Predicted wall time per group to move ``work_bytes`` at the shared
+    bandwidth (bytes / (bw per group)).  Used by the desync simulator."""
+    pred = predict(groups)
+    return tuple(
+        wb / (bw * 1e9) if bw > 0 else float("inf")
+        for wb, bw in zip(work_bytes, pred.bw_group)
+    )

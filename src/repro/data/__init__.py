@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, HostLoader, make_batch_specs
+
+__all__ = ["SyntheticLM", "HostLoader", "make_batch_specs"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the bandwidth-critical compute layers.
+
+The paper's contribution is bandwidth phenomenology, and its kernel suite
+(Table II streaming loops + Jacobi stencils) is the calibration workload —
+reimplemented here as Pallas TPU kernels with explicit BlockSpec VMEM
+tiling.  Attention (prefill + decode) and fused RMSNorm are the serving/
+training hot-spots the TPU adaptation adds on top.
+
+Modules: stream, jacobi, flash_attention, decode_attention, rmsnorm,
+ops (public jit'd API), ref (pure-jnp oracles).
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,132 @@
+"""Public jit'd wrappers for the Pallas kernel suite.
+
+Every op takes ``impl`` selecting the compute path:
+  * ``"pallas"``    — the Pallas TPU kernel, compiled for the TPU backend.
+  * ``"interpret"`` — the same kernel body executed by the Pallas
+    interpreter (CPU-correct; what the tests validate against ref.py).
+  * ``"jnp"``       — the pure-jnp oracle (default; used by the model zoo so
+    the multi-pod dry-run lowers on any backend).
+
+The tests sweep shapes/dtypes and assert allclose between "interpret" and
+"jnp" for every kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import jacobi as _jac
+from . import ref
+from . import rmsnorm as _rms
+from . import stream as _stream
+
+Impl = Literal["pallas", "interpret", "jnp"]
+
+
+def _interp(impl: Impl) -> bool:
+    if impl not in ("pallas", "interpret", "jnp"):
+        raise ValueError(f"unknown impl {impl!r}")
+    return impl == "interpret"
+
+
+# --------------------------------------------------------------------------
+# Streaming suite (paper Table II)
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("name", "impl"))
+def stream_map(name: str, scalar, *arrays, impl: Impl = "jnp"):
+    if impl == "jnp":
+        fns = {
+            "dscal": lambda s, a: ref.dscal(s, a),
+            "daxpy": lambda s, a, b: ref.daxpy(s, a, b),
+            "add": lambda s, a, b: ref.add(a, b),
+            "stream": lambda s, a, b: ref.stream_triad(s, a, b),
+            "waxpby": lambda s, a, b: ref.waxpby(s[0], s[1], a, b),
+            "dcopy": lambda s, a: ref.dcopy(a),
+            "schoenauer": lambda s, a, b, c: ref.schoenauer(a, b, c),
+        }
+        return fns[name](scalar, *arrays)
+    return _stream.map_stream(name, jnp.asarray(scalar), *arrays,
+                              interpret=_interp(impl))
+
+
+@functools.partial(jax.jit, static_argnames=("name", "impl"))
+def stream_reduce(name: str, *arrays, impl: Impl = "jnp"):
+    if impl == "jnp":
+        fns = {"vectorsum": ref.vectorsum, "ddot1": ref.ddot1,
+               "ddot2": ref.ddot2, "ddot3": ref.ddot3}
+        return fns[name](*arrays)
+    return _stream.reduce_stream(name, *arrays, interpret=_interp(impl))
+
+
+# --------------------------------------------------------------------------
+# Jacobi stencils
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def jacobi_v1(a, s, *, impl: Impl = "jnp"):
+    if impl == "jnp":
+        return ref.jacobi_v1(a, s)
+    return _jac.jacobi_v1(a, s, interpret=_interp(impl))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("ax", "ay", "b1", "relax", "impl"))
+def jacobi_v2(a, f, *, ax, ay, b1, relax, impl: Impl = "jnp"):
+    if impl == "jnp":
+        return ref.jacobi_v2(a, f, ax=ax, ay=ay, b1=b1, relax=relax)
+    return _jac.jacobi_v2(a, f, ax=ax, ay=ay, b1=b1, relax=relax,
+                          interpret=_interp(impl))
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "impl", "block_q",
+                                             "block_k"))
+def attention(q, k, v, *, causal: bool = True, impl: Impl = "jnp",
+              block_q: int = 128, block_k: int = 128):
+    if impl == "jnp":
+        return ref.attention(q, k, v, causal=causal)
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=_interp(impl))
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_k"))
+def decode_attention(q, k_cache, v_cache, lengths, *, impl: Impl = "jnp",
+                     block_k: int = 512):
+    if impl == "jnp":
+        return ref.decode_attention(q, k_cache, v_cache, lengths)
+    return _dec.decode_attention(q, k_cache, v_cache, lengths,
+                                 block_k=block_k, interpret=_interp(impl))
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
+def rmsnorm(x, w, *, eps: float = 1e-6, impl: Impl = "jnp"):
+    if impl == "jnp":
+        return ref.rmsnorm(x, w, eps=eps)
+    return _rms.rmsnorm(x, w, eps=eps, interpret=_interp(impl))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
+def rmsnorm_residual(x, residual, w, *, eps: float = 1e-6,
+                     impl: Impl = "jnp"):
+    if impl == "jnp":
+        return ref.rmsnorm_residual(x, residual, w, eps=eps)
+    return _rms.rmsnorm_residual(x, residual, w, eps=eps,
+                                 interpret=_interp(impl))

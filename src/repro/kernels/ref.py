@@ -1,0 +1,143 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the allclose tests (tests/test_kernels_*.py)
+and the default compute path of the model zoo (CPU dry-run compiles use
+these; the Pallas path is enabled per-config on real TPU hardware).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Table II streaming suite
+# --------------------------------------------------------------------------
+
+
+def vectorsum(a):
+    return jnp.sum(a)
+
+
+def ddot1(a):
+    return jnp.sum(a * a)
+
+
+def ddot2(a, b):
+    return jnp.sum(a * b)
+
+
+def ddot3(a, b, c):
+    return jnp.sum(a * b * c)
+
+
+def dscal(s, a):
+    return s * a
+
+
+def daxpy(s, a, b):
+    return a + s * b
+
+
+def add(a, b):
+    return a + b
+
+
+def stream_triad(s, a, b):
+    return a + s * b
+
+
+def waxpby(r, s, a, b):
+    return r * a + s * b
+
+
+def dcopy(a):
+    return a
+
+
+def schoenauer(a, b, c):
+    return a + b * c
+
+
+# --------------------------------------------------------------------------
+# Jacobi stencils
+# --------------------------------------------------------------------------
+
+
+def jacobi_v1(a, s):
+    """5-point sweep on the interior; boundary copied through."""
+    res = (a[1:-1, :-2] + a[1:-1, 2:] + a[:-2, 1:-1] + a[2:, 1:-1]) * s
+    out = a.at[1:-1, 1:-1].set(res)
+    return out
+
+
+def jacobi_v2(a, f, *, ax, ay, b1, relax):
+    r1 = (ax * (a[1:-1, :-2] + a[1:-1, 2:])
+          + ay * (a[:-2, 1:-1] + a[2:, 1:-1])
+          + b1 * a[1:-1, 1:-1] - f[1:-1, 1:-1]) / b1
+    out = a.at[1:-1, 1:-1].set(a[1:-1, 1:-1] - relax * r1)
+    residual = jnp.sum((r1 * r1).astype(jnp.float32))
+    return out, residual
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+
+def attention(q, k, v, *, causal=True, scale=None):
+    """(B, H, S, D) x (B, KV, S, D) -> (B, H, S, D), GQA by repetition."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    scale = (d ** -0.5) if scale is None else scale
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, k.shape[2]), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, scale=None):
+    """(B, H, D) x (B, KV, S, D) -> (B, H, D) with per-batch lengths.
+
+    GQA via grouped einsum — the KV cache is NEVER expanded to H heads
+    (a jnp.repeat here would double the dominant HBM stream of decode and
+    break the cache's sharding under SPMD).
+    """
+    b, h, d = q.shape
+    kv, s = k_cache.shape[1], k_cache.shape[2]
+    group = h // kv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, kv, group, d)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(s)[None, None, None, :]
+    logits = jnp.where(pos < lengths[:, None, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x, w, *, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def rmsnorm_residual(x, residual, w, *, eps=1e-6):
+    h = x.astype(jnp.float32) + residual.astype(jnp.float32)
+    y = rmsnorm(h, w, eps=eps)
+    return y.astype(x.dtype), h.astype(x.dtype)

@@ -1,0 +1,132 @@
+"""Pallas TPU kernels for the paper's Table II streaming suite.
+
+These are the calibration workloads of the reproduction: the paper measured
+(f, b_s) for each of these loops on x86; on TPU they characterize the HBM
+interface the same way.  Each kernel is tiled for VMEM with explicit
+BlockSpecs: 1-D arrays are viewed as (rows, LANES) with LANES = 128 (the VPU
+lane count) and the grid walks row-blocks sized to keep the working set of
+all streams within a VMEM budget.
+
+Map kernels (DSCAL/DAXPY/ADD/STREAM/WAXPBY/DCOPY/Schoenauer) write one output
+stream; reduction kernels (vectorSUM/DDOT1/2/3) accumulate a scalar across
+grid steps through a (1, 1) output block pinned to the same location (TPU
+grid is sequential, so cross-step accumulation is well-defined).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+SUBLANES = 8
+DEFAULT_BLOCK_ROWS = 256          # 256 x 128 f32 = 128 KiB per stream block
+
+
+def _fit_block(rows: int, block_rows: int) -> int:
+    """Largest divisor of ``rows`` not exceeding ``block_rows``."""
+    block_rows = min(block_rows, rows)
+    while rows % block_rows:
+        block_rows -= 1
+    return block_rows
+
+
+# ---------------------------------------------------------------------------
+# Map kernels: out = expr(*ins)
+# ---------------------------------------------------------------------------
+
+_MAP_EXPRS = {
+    "dscal":      lambda s, a: s * a,
+    "daxpy":      lambda s, a, b: a + s * b,
+    "add":        lambda s, a, b: a + b,
+    "stream":     lambda s, a, b: a + s * b,          # STREAM triad
+    "waxpby":     lambda s, a, b: s[0] * a + s[1] * b,
+    "dcopy":      lambda s, a: a,
+    "schoenauer": lambda s, a, b, c: a + b * c,
+}
+
+
+def _map_kernel(expr, scalar_ref, *refs):
+    ins = [r[...] for r in refs[:-1]]
+    out = refs[-1]
+    out[...] = expr(scalar_ref[0], *ins)  # scalar row: (n_scalars,)
+
+
+def map_stream(name: str, scalar: jax.Array, *arrays: jax.Array,
+               block_rows: int = DEFAULT_BLOCK_ROWS,
+               interpret: bool = True) -> jax.Array:
+    """Run one Table II map kernel over equal-shaped 1-D arrays."""
+    expr = _MAP_EXPRS[name]
+    n = arrays[0].shape[0]
+    if n % LANES:
+        raise ValueError(f"size {n} not a multiple of {LANES}")
+    rows = n // LANES
+    block_rows = _fit_block(rows, block_rows)
+    grid = (rows // block_rows,)
+    views = [a.reshape(rows, LANES) for a in arrays]
+    scalar2d = jnp.atleast_1d(scalar).reshape(1, -1)
+
+    out = pl.pallas_call(
+        functools.partial(_map_kernel, expr),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, scalar2d.shape[1]), lambda i: (0, 0)),
+            *[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+              for _ in views],
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), arrays[0].dtype),
+        interpret=interpret,
+    )(scalar2d, *views)
+    return out.reshape(n)
+
+
+# ---------------------------------------------------------------------------
+# Reduction kernels: scalar += expr(*ins)
+# ---------------------------------------------------------------------------
+
+_REDUCE_EXPRS = {
+    "vectorsum": lambda a: a,
+    "ddot1":     lambda a: a * a,
+    "ddot2":     lambda a, b: a * b,
+    "ddot3":     lambda a, b, c: a * b * c,
+}
+
+
+def _reduce_kernel(expr, *refs):
+    *ins, out = refs
+    partial = jnp.sum(expr(*[r[...] for r in ins]))
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out[0, 0] = jnp.zeros((), out.dtype)
+
+    out[0, 0] += partial.astype(out.dtype)
+
+
+def reduce_stream(name: str, *arrays: jax.Array,
+                  block_rows: int = DEFAULT_BLOCK_ROWS,
+                  interpret: bool = True) -> jax.Array:
+    """Run one Table II reduction kernel; returns a scalar."""
+    expr = _REDUCE_EXPRS[name]
+    n = arrays[0].shape[0]
+    if n % LANES:
+        raise ValueError(f"size {n} not a multiple of {LANES}")
+    rows = n // LANES
+    block_rows = _fit_block(rows, block_rows)
+    grid = (rows // block_rows,)
+    views = [a.reshape(rows, LANES) for a in arrays]
+
+    out = pl.pallas_call(
+        functools.partial(_reduce_kernel, expr),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))
+                  for _ in views],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(*views)
+    return out[0, 0]

@@ -1,0 +1,4 @@
+# Launch entry points: mesh construction, multi-pod dry-run, train, serve.
+# NOTE: launch/dryrun.py must be executed as a script/module so its XLA_FLAGS
+# device-count override precedes jax initialization; do not import it from
+# library code.

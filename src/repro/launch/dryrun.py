@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with 512 placeholder devices, and extract the roofline terms.
+
+The FIRST TWO LINES above must stay first: jax locks the device count on
+first init, so the XLA flag must be set before any jax-importing import.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k --mesh both --out results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # the full matrix
+
+Each cell appends one JSON line: memory_analysis, cost_analysis flops/bytes,
+collective byte accounting, the three roofline terms, and MODEL_FLOPS
+ratios.  Already-present (arch, shape, mesh) cells are skipped, so the
+matrix can be filled incrementally across invocations.
+"""
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import sys          # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp                        # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.configs.base import SHAPES          # noqa: E402
+from repro.core import hlo as hlo_lib          # noqa: E402
+from repro.core.machine import TPU_V5E         # noqa: E402
+from repro.models import model_for             # noqa: E402
+from repro.optim import cosine_schedule        # noqa: E402
+from repro.runtime import sharding as shard_rules  # noqa: E402
+from repro.runtime import steps as steps_lib   # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def cell_should_run(cfg, shape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return False, "long_500k skipped: full O(L^2) attention (DESIGN.md)"
+    return True, ""
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D train / 2·N·D inference (N_active for MoE)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, microbatches: int = 1,
+               fsdp: bool | None = None, cfg=None, dp_only: bool = False,
+               cfg_over: dict | None = None):
+    import dataclasses as dc
+    cfg = cfg or configs.get_config(arch)
+    if cfg_over:
+        cfg = dc.replace(cfg, **cfg_over)
+    shape = SHAPES[shape_name]
+    model = model_for(cfg)
+
+    if shape.kind == "train":
+        state_shape = jax.eval_shape(
+            lambda: steps_lib.init_train_state(model, jax.random.key(0)))
+        batch_specs = model.input_specs(shape)
+        step, state_sh, batch_sh = steps_lib.jit_train_step(
+            model, mesh, state_shape, batch_specs,
+            lr_fn=cosine_schedule(3e-4, 100, 10000),
+            microbatches=microbatches, fsdp=fsdp, dp_only=dp_only)
+        lowered = step.lower(state_shape, batch_specs)
+    elif shape.kind == "prefill":
+        batch_specs = model.input_specs(shape)
+        params_shape = jax.eval_shape(
+            lambda: model.init(jax.random.key(0)))
+        pshard = shard_rules.param_shardings(cfg, mesh, params_shape,
+                                             fsdp=fsdp, dp_only=dp_only)
+        bshard = shard_rules.batch_shardings(mesh, batch_specs,
+                                             dp_only=dp_only)
+
+        def prefill(params, batch):
+            loss, metrics = model.loss(params, batch)
+            return loss
+        fn = jax.jit(prefill, in_shardings=(pshard, bshard))
+        lowered = fn.lower(params_shape, batch_specs)
+    else:  # decode
+        specs = model.input_specs(shape)
+        params_shape = jax.eval_shape(
+            lambda: model.init(jax.random.key(0)))
+        step, pshard, cshard, tok_sh = steps_lib.jit_serve_step(
+            model, mesh, params_shape, specs["cache"],
+            batch=shape.global_batch, fsdp=fsdp)
+        lowered = step.lower(params_shape, specs["cache"],
+                             specs["tokens"], specs["pos"])
+    return lowered
+
+
+def _cell_costs(compiled) -> dict:
+    cost = compiled.cost_analysis() or {}
+    stats = hlo_lib.collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire": stats.total_wire_bytes,
+        "counts": stats.counts,
+        "wire_by_op": stats.wire_bytes,
+    }
+
+
+def _aux_depths(cfg) -> tuple[int, int]:
+    if cfg.family == "hybrid":
+        k = len(cfg.block_pattern or ("rec", "rec", "attn"))
+        return k, 2 * k
+    return 1, 2
+
+
+def extrapolated_costs(arch, shape_name, mesh, *, fsdp=None,
+                       dp_only=False, microbatches=1,
+                       cfg_over=None) -> dict:
+    """XLA's cost_analysis counts while-loop bodies ONCE, so a scan-stacked
+    model under-reports flops/bytes/collectives by ~n_layers.  We recover
+    exact totals by compiling the model UNROLLED at two small depths (k1,
+    k2) and extrapolating linearly to the full depth — exact because layers
+    are uniform."""
+    import dataclasses as dc
+    cfg = configs.get_config(arch)
+    if cfg_over:
+        cfg = dc.replace(cfg, **cfg_over)
+    k1, k2 = _aux_depths(cfg)
+    total = {}
+    samples = {}
+    for k in (k1, k2):
+        over = {"n_layers": k, "use_scan": False}
+        if cfg.family == "encdec":
+            over["enc_layers"] = k
+        cfg_k = dc.replace(cfg, **over)
+        lowered = lower_cell(arch, shape_name, mesh, cfg=cfg_k, fsdp=fsdp,
+                             dp_only=dp_only, microbatches=microbatches)
+        samples[k] = _cell_costs(lowered.compile())
+    L = cfg.n_layers
+    for key in ("flops", "bytes", "wire"):
+        slope = (samples[k2][key] - samples[k1][key]) / (k2 - k1)
+        # Layout/fusion noise can make the slope slightly negative for tiny
+        # per-layer costs; clamp to the k1 sample as a floor.
+        total[key] = max(samples[k1][key] + slope * (L - k1),
+                         samples[k1][key] * 0.5, 0.0)
+    total["counts_per_layer"] = samples[k2]["counts"]
+    return total
+
+
+def analyse(lowered, compiled, arch, shape_name, mesh_name, n_chips,
+            elapsed_s, extra_costs=None):
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo_text = compiled.as_text()
+    stats = hlo_lib.collective_stats(hlo_text)
+    if extra_costs is not None:
+        # Exact totals from the unrolled-depth extrapolation (the scanned
+        # compile under-counts while-loop bodies).  All figures per-device.
+        cost = {"flops": extra_costs["flops"],
+                "bytes accessed": extra_costs["bytes"]}
+        stats = hlo_lib.CollectiveStats(
+            counts=stats.counts, operand_bytes=stats.operand_bytes,
+            wire_bytes={"total": extra_costs["wire"]})
+    terms = hlo_lib.roofline_terms(
+        f"{arch}/{shape_name}/{mesh_name}", cost, stats, n_chips=n_chips,
+        model_flops_total=model_flops(cfg, shape))
+    mem_fields = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "peak_memory_in_bytes"):
+        mem_fields[f] = getattr(mem, f, None)
+    args_b = mem_fields.get("argument_size_in_bytes") or 0
+    temp_b = mem_fields.get("temp_size_in_bytes") or 0
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_chips": n_chips, "status": "ok", "compile_s": round(elapsed_s, 1),
+        "flops_per_chip": terms.flops,
+        "hbm_bytes_per_chip": terms.hbm_bytes,
+        "wire_bytes_per_chip": terms.wire_bytes,
+        "collective_counts": stats.counts,
+        "collective_wire_bytes": stats.wire_bytes,
+        "t_compute_s": terms.t_compute,
+        "t_memory_s": terms.t_memory,
+        "t_collective_s": terms.t_collective,
+        "dominant": terms.dominant,
+        "model_flops_per_chip": terms.model_flops,
+        "useful_flop_ratio": terms.useful_flop_ratio,
+        "roofline_fraction": terms.roofline_fraction,
+        "memory_analysis": mem_fields,
+        "bytes_per_device_est": (args_b + temp_b) / max(n_chips, 1),
+        "fits_hbm": ((args_b + temp_b) / max(n_chips, 1))
+        < TPU_V5E.hbm_bytes,
+    }
+
+
+def run_cell(arch, shape_name, mesh_name, out_path, *, microbatches=1,
+             fsdp=None, dp_only=False, variant="baseline", cfg_over=None):
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = cell_should_run(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": reason, "variant": variant}
+        _append(out_path, rec)
+        print(f"SKIP {arch}/{shape_name}/{mesh_name}: {reason}")
+        return rec
+    multi = mesh_name == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    n_chips = 512 if multi else 256
+    if not multi:
+        # Single-pod mesh on 512 placeholder devices: use the first 256.
+        import numpy as np
+        devs = np.asarray(jax.devices()[:256]).reshape(16, 16)
+        from jax.sharding import Mesh
+        mesh = Mesh(devs, ("data", "model"))
+    t0 = time.time()
+    try:
+        lowered = lower_cell(arch, shape_name, mesh,
+                             microbatches=microbatches, fsdp=fsdp,
+                             dp_only=dp_only, cfg_over=cfg_over)
+        compiled = lowered.compile()
+        extra = extrapolated_costs(arch, shape_name, mesh, fsdp=fsdp,
+                                   dp_only=dp_only,
+                                   microbatches=microbatches,
+                                   cfg_over=cfg_over)
+        rec = analyse(lowered, compiled, arch, shape_name, mesh_name,
+                      n_chips, time.time() - t0, extra_costs=extra)
+        rec["variant"] = variant
+        rec["options"] = {"microbatches": microbatches, "dp_only": dp_only,
+                          "fsdp": fsdp, "cfg_over": cfg_over or {}}
+        print(f"OK   {arch}/{shape_name}/{mesh_name}[{variant}]: "
+              f"dominant={rec['dominant']} "
+              f"roofline={rec['roofline_fraction']:.3f} "
+              f"t=({rec['t_compute_s']:.3f},{rec['t_memory_s']:.3f},"
+              f"{rec['t_collective_s']:.3f})s "
+              f"mem/dev={rec['bytes_per_device_est']/2**30:.2f}GiB "
+              f"({rec['compile_s']}s)")
+    except Exception as e:  # noqa: BLE001 — record the failure and move on
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "variant": variant,
+               "traceback": traceback.format_exc()[-2000:]}
+        print(f"FAIL {arch}/{shape_name}/{mesh_name}: {type(e).__name__}: "
+              f"{e}", file=sys.stderr)
+    _append(out_path, rec)
+    return rec
+
+
+def _append(path, rec):
+    if path:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+def _done_cells(path):
+    done = set()
+    if path and os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS)
+    ap.add_argument("--shape", choices=sorted(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true",
+                    help="run the full 10x4x2 matrix (resumable)")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--dp-only", action="store_true",
+                    help="no TP: FSDP params + batch over the whole mesh")
+    ap.add_argument("--remat-policy", choices=("nothing", "dots"),
+                    default=None)
+    ap.add_argument("--variant", default="baseline",
+                    help="label for this record (perf experiments)")
+    args = ap.parse_args()
+    cfg_over = {}
+    if args.remat_policy:
+        cfg_over["remat_policy"] = args.remat_policy
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        cells = [(a, s, m) for a in configs.ARCH_IDS
+                 for s in ("train_4k", "prefill_32k", "decode_32k",
+                           "long_500k")
+                 for m in meshes]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape, m) for m in meshes]
+
+    done = _done_cells(args.out) if args.variant == "baseline" else set()
+    for arch, shape, mesh_name in cells:
+        if (arch, shape, mesh_name) in done:
+            print(f"SKIP (done) {arch}/{shape}/{mesh_name}")
+            continue
+        run_cell(arch, shape, mesh_name, args.out,
+                 microbatches=args.microbatches, dp_only=args.dp_only,
+                 variant=args.variant, cfg_over=cfg_over or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count is locked at first jax init — the dry-run sets
+XLA_FLAGS before importing anything).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(*, model_axis: int = 1):
+    """Whatever this host actually has — used by examples and tests."""
+    n = len(jax.devices())
+    if n % model_axis:
+        model_axis = 1
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))

@@ -1,0 +1,100 @@
+"""Training launcher.
+
+On real hardware this runs under one process per host with
+``jax.distributed.initialize()``; on this container it drives the same code
+path on the host's devices with a reduced config.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+      --steps 200 --reduced --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+import time
+
+import jax
+
+from repro import configs
+from repro.data import SyntheticLM
+from repro.models import model_for
+from repro.optim import cosine_schedule
+from repro.runtime import loop as loop_lib
+from repro.runtime import steps as steps_lib
+from repro.launch.mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCH_IDS, required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-test-sized config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    logging.basicConfig(level=logging.INFO)
+    cfg = (configs.get_reduced(args.arch) if args.reduced
+           else configs.get_config(args.arch))
+    model = model_for(cfg)
+    mesh = make_host_mesh()
+    lr_fn = cosine_schedule(args.lr, args.steps // 10 + 1, args.steps)
+
+    dataset = SyntheticLM(cfg, seq_len=args.seq_len,
+                          global_batch=args.batch)
+
+    state = steps_lib.init_train_state(model, jax.random.key(0))
+    state_shape = jax.eval_shape(lambda: state)
+    batch_specs = {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                   for k, v in dataset.batch(0).items()}
+    step_fn, state_sh, _ = steps_lib.jit_train_step(
+        model, mesh, state_shape, batch_specs, lr_fn=lr_fn,
+        microbatches=args.microbatches)
+    state = jax.device_put(state, state_sh)
+
+    ckpt = None
+    start = 0
+    if args.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+        ckpt = CheckpointManager(args.ckpt_dir)
+        restored, manifest = ckpt.restore_latest(state)
+        if restored is not None:
+            state, start = restored, int(manifest["step"])
+            print(f"restored from step {start}")
+
+    from repro.data import HostLoader
+    loader = HostLoader(dataset, start_step=start)
+    t0 = time.time()
+    try:
+        losses = []
+        step = start
+        for batch in loader:
+            if step >= args.steps:
+                break
+            state, metrics = step_fn(state, batch)
+            losses.append(float(metrics["loss"]))
+            step += 1
+            if step % args.log_every == 0:
+                dt = (time.time() - t0) / (step - start)
+                print(f"step {step}: loss={losses[-1]:.4f} "
+                      f"({dt*1e3:.0f} ms/step)")
+            if ckpt and step % args.ckpt_every == 0:
+                ckpt.save_async(step, state, extra={"loss": losses[-1]})
+        if ckpt:
+            ckpt.save_async(step, state, extra={"final": True})
+            ckpt.wait()
+        print(f"done: step={step} first_loss={losses[0]:.4f} "
+              f"last_loss={losses[-1]:.4f}")
+    finally:
+        loader.close()
+
+
+if __name__ == "__main__":
+    main()

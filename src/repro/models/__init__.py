@@ -1,0 +1,104 @@
+"""Model zoo: one factory covering all 10 assigned architectures.
+
+``model_for(cfg)`` returns a :class:`Model` facade with a uniform
+interface; the runtime (train/serve step builders, dry-run) never touches
+family-specific code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import mamba2, rglru, transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[[Any, dict], tuple[jax.Array, dict]]
+    init_cache: Callable[..., Any]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+
+    def input_specs(self, shape: ShapeConfig, *,
+                    batch_override: int | None = None) -> dict:
+        """ShapeDtypeStruct stand-ins for one step's inputs (no allocation)."""
+        cfg = self.cfg
+        b = batch_override or shape.global_batch
+        s = shape.seq_len
+        i32 = jnp.int32
+        if shape.kind in ("train", "prefill"):
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "labels": jax.ShapeDtypeStruct((b, s), i32),
+            }
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_audio_frames, cfg.d_model),
+                    jnp.dtype(cfg.dtype))
+            if cfg.family == "vlm":
+                specs["patches"] = jax.ShapeDtypeStruct(
+                    (b, cfg.n_patches, cfg.d_model), jnp.dtype(cfg.dtype))
+            return specs
+        # decode: one new token against a seq_len-deep cache
+        return {
+            "tokens": jax.ShapeDtypeStruct((b,), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+            "cache": jax.eval_shape(
+                lambda: self.init_cache(b, s)),
+        }
+
+
+def _lm_batch_adapter(cfg: ModelConfig, loss_fn):
+    def loss(params, batch):
+        return loss_fn(cfg, params, batch)
+    return loss
+
+
+def model_for(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return Model(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(cfg, key),
+            loss=_lm_batch_adapter(cfg, transformer.loss_fn),
+            init_cache=lambda b, s: transformer.init_cache(cfg, b, s),
+            decode_step=lambda params, cache, tokens, pos:
+                transformer.decode_step(cfg, params, cache, tokens, pos),
+        )
+    if fam == "ssm":
+        return Model(
+            cfg=cfg,
+            init=lambda key: mamba2.init_params(cfg, key),
+            loss=_lm_batch_adapter(cfg, mamba2.loss_fn),
+            init_cache=lambda b, s=0: mamba2.init_cache(cfg, b, s),
+            decode_step=lambda params, cache, tokens, pos:
+                mamba2.decode_step(cfg, params, cache, tokens, pos),
+        )
+    if fam == "hybrid":
+        return Model(
+            cfg=cfg,
+            init=lambda key: rglru.init_params(cfg, key),
+            loss=_lm_batch_adapter(cfg, rglru.loss_fn),
+            init_cache=lambda b, s: rglru.init_cache(cfg, b, s),
+            decode_step=lambda params, cache, tokens, pos:
+                rglru.decode_step(cfg, params, cache, tokens, pos),
+        )
+    if fam == "encdec":
+        return Model(
+            cfg=cfg,
+            init=lambda key: whisper.init_params(cfg, key),
+            loss=_lm_batch_adapter(cfg, whisper.loss_fn),
+            init_cache=lambda b, s: whisper.init_cache(cfg, b, s),
+            decode_step=lambda params, cache, tokens, pos:
+                whisper.decode_step(cfg, params, cache, tokens, pos),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+__all__ = ["Model", "model_for", "mamba2", "rglru", "transformer", "whisper"]

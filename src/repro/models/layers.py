@@ -1,0 +1,314 @@
+"""Shared neural building blocks (pure-functional JAX).
+
+Params are plain nested dicts of jax.Array.  Every function takes
+``cfg: ModelConfig`` for dtype/architecture switches.  Compute runs in
+``cfg.dtype`` (bf16 by default) with f32 norms/softmax accumulations;
+params are stored in ``cfg.param_dtype``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..kernels import ops
+
+# --------------------------------------------------------------------------
+# Init helpers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+def remat(cfg: ModelConfig, fn, static_argnums=()):
+    """Apply the configured rematerialization policy to a layer body."""
+    if not cfg.remat:
+        return fn
+    policy = {
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }[cfg.remat_policy]
+    return jax.checkpoint(fn, policy=policy, static_argnums=static_argnums)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def norm_params(cfg: ModelConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"w": jnp.ones((d,), jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["b"] = jnp.zeros((d,), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        impl = cfg.kernels if cfg.kernels != "pallas" else "pallas"
+        return ops.rmsnorm(x, p["w"], impl=impl).astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+    y = y * p["w"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(cfg: ModelConfig, positions: jax.Array) -> tuple[jax.Array,
+                                                                jax.Array]:
+    """positions: (...,) int -> cos/sin of shape (..., head_dim//2)."""
+    hd = cfg.head_dim_
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32)
+                                    / hd))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D) with cos/sin (..., S, D//2) broadcast over heads."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+
+def attention_params(cfg: ModelConfig, key, d_model: int | None = None):
+    d = d_model or cfg.d_model
+    hd = cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], d, cfg.kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, cfg.kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_heads * hd,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_heads * hd,), dt)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KV,hd)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (q.reshape(b, s, cfg.n_heads, hd),
+            k.reshape(b, s, cfg.kv_heads, hd),
+            v.reshape(b, s, cfg.kv_heads, hd))
+
+
+CHUNK_Q = 2048   # q-block size of the chunked-attention path
+
+
+def _sdpa_block(qf, kf, vf, *, scale, q0, k0, causal, local_window):
+    """One q-block against one kv-slice.  qf: (B,bq,KV,g,hd);
+    kf/vf: (B,bk,KV,hd).  q0/k0: global offsets.
+
+    MXU-style mixed precision: operands stay in their storage dtype (bf16
+    in production) and only the dot ACCUMULATORS are f32
+    (preferred_element_type) — softmax statistics in f32, probabilities
+    stored back in the storage dtype.  This halves the HBM traffic of the
+    two big attention tensors vs. upcasting everything.
+    """
+    bq, bk = qf.shape[1], kf.shape[1]
+    logits = jnp.einsum("bskgd,btkd->bkgst", qf, kf,
+                        preferred_element_type=jnp.float32) * scale
+    qpos = q0 + jnp.arange(bq)[:, None]
+    kpos = k0 + jnp.arange(bk)[None, :]
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if local_window:
+        mask &= kpos > qpos - local_window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(qf.dtype)
+    return jnp.einsum("bkgst,btkd->bskgd", probs, vf,
+                      preferred_element_type=jnp.float32).astype(qf.dtype)
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, *, causal: bool,
+          local_window: int = 0, cross: bool = False) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,T,KV,hd) -> (B,S,H,hd).
+
+    GQA without materializing repeated KV: reshape H -> (KV, group).
+
+    For long sequences the computation is CHUNKED over q blocks with static
+    causal kv-prefix slices (python-unrolled): flash-attention's memory
+    behavior expressed in pure jnp, so the dry-run roofline sees O(S·bq)
+    temporaries and the exact causal flop count — and XLA's cost analysis
+    accounts every block (no while-loop undercount).  On real TPU hardware
+    cfg.kernels="pallas" swaps in the true flash kernel.
+    """
+    b, s, h, hd = q.shape
+    t, kv = k.shape[1], k.shape[2]
+    group = h // kv
+    scale = hd ** -0.5
+    qf = q.reshape(b, s, kv, group, hd)
+    kf, vf = k, v
+    offset = t - s if (causal and not cross) else 0
+
+    if s <= CHUNK_Q:
+        out = _sdpa_block(qf, kf, vf, scale=scale, q0=offset, k0=0,
+                          causal=causal and not cross,
+                          local_window=local_window)
+        return out.reshape(b, s, h, hd).astype(q.dtype)
+
+    blocks = []
+    bq = CHUNK_Q
+    for i in range(0, s, bq):
+        q0 = i + offset
+        qb = qf[:, i:i + bq]
+        if causal and not cross:
+            hi = min(q0 + qb.shape[1], t)          # causal prefix
+            lo = max(0, q0 - local_window + 1) if local_window else 0
+            lo = (lo // bq) * bq                   # keep slices aligned
+        else:
+            lo, hi = 0, t
+        out = _sdpa_block(qb, kf[:, lo:hi], vf[:, lo:hi], scale=scale,
+                          q0=q0, k0=lo, causal=causal and not cross,
+                          local_window=local_window)
+        blocks.append(out)
+    out = jnp.concatenate(blocks, axis=1)
+    return out.reshape(b, s, h, hd).astype(q.dtype)
+
+
+def attention(cfg: ModelConfig, p, x, positions, *, causal=True,
+              local_window=0):
+    """Full self-attention over x: (B, S, D)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    cos, sin = rope_freqs(cfg, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if cfg.kernels in ("pallas", "interpret") and causal and not local_window:
+        out = ops.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=True,
+                            impl=cfg.kernels).transpose(0, 2, 1, 3)
+    else:
+        out = _sdpa(cfg, q, k, v, causal=causal, local_window=local_window)
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def attention_decode(cfg: ModelConfig, p, x, cache_k, cache_v, pos, *,
+                     local_window: int = 0):
+    """One-token decode.  x: (B, 1, D); caches (B, S, KV, hd); pos (B,).
+
+    Returns (out (B,1,D), new_k, new_v)."""
+    b = x.shape[0]
+    hd = cfg.head_dim_
+    q, k, v = _project_qkv(cfg, p, x)           # (B,1,H/KV,hd)
+    cos, sin = rope_freqs(cfg, pos[:, None])
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    s_cache = cache_k.shape[1]
+    if local_window and local_window < s_cache:
+        # Ring buffer for local attention: write at pos % window.
+        slot = (pos % local_window)
+    else:
+        slot = pos
+    # In-place single-row write per sequence (vs. a full-cache select,
+    # which would charge 2x the cache size to HBM every step).
+    upd = jax.vmap(
+        lambda c, row, p: jax.lax.dynamic_update_slice_in_dim(
+            c, row, p, axis=0))
+    cache_k = upd(cache_k, k, slot)
+    cache_v = upd(cache_v, v, slot)
+
+    q_ = q.transpose(0, 2, 1, 3).reshape(b, cfg.n_heads, hd)
+    k_ = cache_k.transpose(0, 2, 1, 3)           # (B,KV,S,hd)
+    v_ = cache_v.transpose(0, 2, 1, 3)
+    if local_window and local_window < s_cache:
+        lengths = jnp.minimum(pos + 1, local_window).astype(jnp.int32)
+        # Ring buffer valid region is [0, min(pos+1, window)); RoPE encodes
+        # absolute positions so attention content is position-correct.
+        out = ops.decode_attention(q_, k_, v_, lengths,
+                                   impl=cfg.kernels)
+    else:
+        out = ops.decode_attention(q_, k_, v_, (pos + 1).astype(jnp.int32),
+                                   impl=cfg.kernels)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+
+def mlp_params(cfg: ModelConfig, key, d_ff: int | None = None):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {"wi": dense_init(ks[0], d, ff, dt),
+                "wg": dense_init(ks[1], d, ff, dt),
+                "wo": dense_init(ks[2], ff, d, dt)}
+    return {"wi": dense_init(ks[0], d, ff, dt),
+            "wo": dense_init(ks[2], ff, d, dt)}
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    h = x @ p["wi"].astype(x.dtype)
+    if cfg.act == "swiglu":
+        g = x @ p["wg"].astype(x.dtype)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * h
+    elif cfg.act == "geglu":
+        g = x @ p["wg"].astype(x.dtype)
+        h = jax.nn.gelu(g.astype(jnp.float32)).astype(x.dtype) * h
+    elif cfg.act == "sq_relu":
+        r = jnp.maximum(h.astype(jnp.float32), 0.0)
+        h = (r * r).astype(x.dtype)
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    else:
+        raise ValueError(cfg.act)
+    return h @ p["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+
+def softcap(x, cap: float):
+    if not cap:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def unembed(cfg: ModelConfig, emb_or_w, x):
+    w = emb_or_w.astype(x.dtype)
+    logits = x @ (w.T if w.shape[0] == cfg.vocab else w)
+    return softcap(logits.astype(jnp.float32), cfg.logits_softcap)

@@ -1,0 +1,292 @@
+"""Mamba-2 (SSD — state-space duality) language model.
+
+The attention-free assigned architecture (mamba2-1.3b): the SSD chunked
+scan is the memory-bound kernel par excellence — O(S) state streaming with
+tiny arithmetic intensity at decode — making it the natural TPU analogue of
+the paper's streaming suite.
+
+Projections are kept as separate matrices (wz/wx/wb/wc/wdt) rather than one
+fused in_proj: each is then cleanly column- or row-shardable for tensor
+parallelism without resharding at the split boundaries (see
+runtime/sharding.py).
+
+Train/prefill path: chunked SSD —
+  within chunk c (length Q), with per-step log-decay l_t = dt_t * A_h:
+    L_ij = exp(cum_i - cum_j)  (j <= i)            # intra-chunk decay mask
+    Y_intra = (C B^T ⊙ L) @ (dt ⊙ X)
+    S_c     = Σ_j exp(cum_Q - cum_j) B_j ⊗ (dt_j X_j)   # chunk state
+    Y_inter = exp(cum_i) C_i @ H_{c-1};  H_c = exp(cum_Q) H_{c-1} + S_c
+  H carried by lax.scan over chunks.
+
+Decode path: the linear recurrence h = a h + dt * (B ⊗ x), y = h C + D x,
+with causal depthwise-conv states of width 4 on x, B, C.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers
+
+CONV_W = 4
+HEAD_DIM = 64
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = cfg.ssm_heads or d_in // HEAD_DIM
+    hd = d_in // n_heads
+    return d_in, n_heads, hd, cfg.ssm_state
+
+
+def layer_params(cfg: ModelConfig, key):
+    d = cfg.d_model
+    d_in, nh, hd, n = _dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 9)
+    return {
+        "ln": layers.norm_params(cfg),
+        "wz": layers.dense_init(ks[0], d, d_in, dt),
+        "wx": layers.dense_init(ks[1], d, d_in, dt),
+        "wb": layers.dense_init(ks[2], d, n, dt),
+        "wc": layers.dense_init(ks[3], d, n, dt),
+        "wdt": layers.dense_init(ks[4], d, nh, dt),
+        "conv_x": (jax.random.normal(ks[5], (CONV_W, d_in), jnp.float32)
+                   * 0.5).astype(dt),
+        "conv_xb": jnp.zeros((d_in,), dt),
+        "conv_b": (jax.random.normal(ks[6], (CONV_W, n), jnp.float32)
+                   * 0.5).astype(dt),
+        "conv_bb": jnp.zeros((n,), dt),
+        "conv_c": (jax.random.normal(ks[7], (CONV_W, n), jnp.float32)
+                   * 0.5).astype(dt),
+        "conv_cb": jnp.zeros((n,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dt),
+        "d_skip": jnp.ones((nh,), dt),
+        "dt_bias": jnp.zeros((nh,), dt),
+        "out_ln": layers.norm_params(cfg, d_in),
+        "out_proj": layers.dense_init(ks[8], d_in, d, dt),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl = jax.random.split(key)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(functools.partial(layer_params, cfg))(lkeys)
+    return {
+        "embed": layers.embed_init(ke, cfg.vocab, cfg.d_model,
+                                   jnp.dtype(cfg.param_dtype)),
+        "layers": stacked,
+        "ln_f": layers.norm_params(cfg),
+    }
+
+
+# --------------------------------------------------------------------------
+# SSD chunked scan
+# --------------------------------------------------------------------------
+
+
+def _ssd_chunked(x, b_in, c_in, log_a, chunk: int):
+    """x: (B,S,H,P); b_in/c_in: (B,S,N); log_a: (B,S,H) (dt already folded
+    into x).  Returns y: (B,S,H,P)."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s)
+    while s % q:
+        q -= 1
+    nc = s // q
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    bc = b_in.reshape(bsz, nc, q, n)
+    cc = c_in.reshape(bsz, nc, q, n)
+    lc = log_a.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(lc, axis=2)                       # (B,NC,Q,H)
+
+    # Intra-chunk: L_ij = exp(cum_i - cum_j), j <= i.
+    li = cum[:, :, :, None, :]                         # (B,NC,Q,1,H)
+    lj = cum[:, :, None, :, :]                         # (B,NC,1,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # Mask the exponent (not the result): exp of a large positive diff above
+    # the diagonal would be inf and poison gradients through jnp.where.
+    decay = jnp.exp(jnp.where(mask, li - lj, -1e30))   # (B,NC,Q,Q,H)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)         # (B,NC,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, xc)
+
+    # Chunk summary state: S_c = sum_j exp(cum_Q - cum_j) B_j (x_j)^T.
+    w = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,NC,Q,H)
+    s_chunk = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", bc, w, xc)
+    a_chunk = jnp.exp(cum[:, :, -1, :])                # (B,NC,H)
+
+    def scan_body(h_prev, inp):
+        s_c, a_c = inp                                  # (B,H,N,P), (B,H)
+        h_new = a_c[..., None, None] * h_prev + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bsz, h, n, p), x.dtype)
+    _, h_befores = jax.lax.scan(
+        scan_body,
+        h0,
+        (s_chunk.transpose(1, 0, 2, 3, 4), a_chunk.transpose(1, 0, 2)),
+    )
+    h_befores = h_befores.transpose(1, 0, 2, 3, 4)      # (B,NC,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         cc, jnp.exp(cum), h_befores)
+    return (y_intra + y_inter).reshape(bsz, s, h, p)
+
+
+def _causal_conv(u, w, b):
+    """Depthwise causal conv, width CONV_W, SiLU.  u: (B,S,C); w: (W,C)."""
+    pads = [(0, 0), (CONV_W - 1, 0), (0, 0)]
+    up = jnp.pad(u, pads)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(CONV_W))
+    return jax.nn.silu((out + b).astype(jnp.float32)).astype(u.dtype)
+
+
+def _mixer(cfg: ModelConfig, lp, x):
+    """SSD sequence mixer.  x: (B, S, D) -> (B, S, D)."""
+    bsz, s, _ = x.shape
+    d_in, nh, hd, n = _dims(cfg)
+    xdt = x.dtype
+    z = x @ lp["wz"].astype(xdt)
+    xs = _causal_conv(x @ lp["wx"].astype(xdt),
+                      lp["conv_x"].astype(xdt), lp["conv_xb"].astype(xdt))
+    b_in = _causal_conv(x @ lp["wb"].astype(xdt),
+                        lp["conv_b"].astype(xdt), lp["conv_bb"].astype(xdt))
+    c_in = _causal_conv(x @ lp["wc"].astype(xdt),
+                        lp["conv_c"].astype(xdt), lp["conv_cb"].astype(xdt))
+    dt_raw = x @ lp["wdt"].astype(xdt)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(lp["a_log"].astype(jnp.float32))              # (H,)
+    log_a = dt * a[None, None, :]
+
+    xh = xs.reshape(bsz, s, nh, hd).astype(jnp.float32)
+    x_dt = xh * dt[..., None]
+    y = _ssd_chunked(x_dt, b_in.astype(jnp.float32),
+                     c_in.astype(jnp.float32), log_a, cfg.ssm_chunk)
+    y = y + lp["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(bsz, s, d_in).astype(xdt)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(xdt)
+    y = layers.apply_norm(cfg, lp["out_ln"], y)
+    return y @ lp["out_proj"].astype(xdt)
+
+
+def hidden_states(cfg: ModelConfig, params, x):
+    def body(lp, x):
+        return x + _mixer(cfg, lp, layers.apply_norm(cfg, lp["ln"], x))
+    if cfg.remat:
+        body = layers.remat(cfg, body)
+
+    if cfg.use_scan:
+        def scan_body(carry, lp):
+            return body(lp, carry), None
+        x, _ = jax.lax.scan(scan_body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x = body(lp, x)
+    return layers.apply_norm(cfg, params["ln_f"], x)
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = hidden_states(cfg, params, x)
+    return layers.unembed(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits = forward(cfg, params, batch["tokens"])
+    labels = batch["labels"]
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss, {"lm_loss": loss}
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int = 0):
+    """SSM state + conv rings: O(1) in sequence length."""
+    d_in, nh, hd, n = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    return {
+        "ssm": jnp.zeros((L, batch, nh, n, hd), dt),
+        "conv_x": jnp.zeros((L, batch, CONV_W - 1, d_in), dt),
+        "conv_b": jnp.zeros((L, batch, CONV_W - 1, n), dt),
+        "conv_c": jnp.zeros((L, batch, CONV_W - 1, n), dt),
+    }
+
+
+def _conv_step(u, hist, w, b):
+    """u: (B, C) new input; hist: (B, W-1, C) -> (out (B,C), new hist)."""
+    full = jnp.concatenate([hist, u[:, None]], axis=1)
+    out = jnp.einsum("bwc,wc->bc", full, w) + b
+    out = jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype)
+    return out, full[:, 1:]
+
+
+def _mixer_step(cfg: ModelConfig, lp, x, cache):
+    """x: (B, D) single step.  cache: dict of this layer's states."""
+    bsz = x.shape[0]
+    d_in, nh, hd, n = _dims(cfg)
+    xdt = x.dtype
+    z = x @ lp["wz"].astype(xdt)
+    xs, cx = _conv_step(x @ lp["wx"].astype(xdt), cache["conv_x"],
+                        lp["conv_x"].astype(xdt), lp["conv_xb"].astype(xdt))
+    b_in, cb = _conv_step(x @ lp["wb"].astype(xdt), cache["conv_b"],
+                          lp["conv_b"].astype(xdt), lp["conv_bb"].astype(xdt))
+    c_in, cc = _conv_step(x @ lp["wc"].astype(xdt), cache["conv_c"],
+                          lp["conv_c"].astype(xdt), lp["conv_cb"].astype(xdt))
+    dt_raw = x @ lp["wdt"].astype(xdt)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))   # (B,H)
+    a = jnp.exp(dt * -jnp.exp(lp["a_log"].astype(jnp.float32)))  # (B,H)
+    xh = xs.reshape(bsz, nh, hd).astype(jnp.float32)
+    upd = jnp.einsum("bn,bhp->bhnp", b_in.astype(jnp.float32),
+                     xh * dt[..., None])
+    new_ssm = a[..., None, None] * cache["ssm"].astype(jnp.float32) + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_in.astype(jnp.float32), new_ssm)
+    y = y + lp["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, d_in).astype(xdt)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(xdt)
+    y = layers.apply_norm(cfg, lp["out_ln"], y)
+    out = y @ lp["out_proj"].astype(xdt)
+    new_cache = {"ssm": new_ssm.astype(cache["ssm"].dtype),
+                 "conv_x": cx, "conv_b": cb, "conv_c": cc}
+    return out, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))   # (B, D)
+
+    def body(carry, inp):
+        x = carry
+        lp, layer_cache = inp
+        h = layers.apply_norm(cfg, lp["ln"], x)
+        y, new_cache = _mixer_step(cfg, lp, h, layer_cache)
+        return x + y, new_cache
+
+    if cfg.use_scan:
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    else:
+        caches = []
+        for i in range(cfg.n_layers):
+            inp = jax.tree.map(lambda a: a[i], (params["layers"], cache))
+            x, nc = body(x, inp)
+            caches.append(nc)
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    logits = layers.unembed(cfg, params["embed"], x)
+    return logits, new_cache

@@ -1,0 +1,97 @@
+"""Token-choice top-k Mixture-of-Experts layer (GShard-style dense dispatch).
+
+The dispatch/combine einsums are the EP-friendly formulation: with the
+expert axis sharded over the mesh "model" axis, XLA lowers the dispatch to
+an all-to-all, which is exactly the collective the bandwidth-sharing
+analysis treats as a high-f stream.
+
+Capacity-based: each expert processes at most C = ceil(cap_factor * T * k / E)
+tokens; overflow tokens are dropped (their contribution is the residual
+pass-through) — the standard production trade for static shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers
+
+
+def moe_params(cfg: ModelConfig, key):
+    assert cfg.moe is not None
+    e, d, ff = cfg.moe.n_experts, cfg.d_model, cfg.moe.d_ff_expert
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "router": layers.dense_init(ks[0], d, e, dt),
+        "wi": (jax.random.normal(ks[1], (e, d, ff), jnp.float32)
+               * scale).astype(dt),
+        "wg": (jax.random.normal(ks[2], (e, d, ff), jnp.float32)
+               * scale).astype(dt),
+        "wo": (jax.random.normal(ks[3], (e, ff, d), jnp.float32)
+               * (ff ** -0.5)).astype(dt),
+    }
+    return p
+
+
+GROUP = 256   # tokens per dispatch group (GShard 'G' dimension)
+
+
+def apply_moe(cfg: ModelConfig, p, x, *, cap_factor: float = 1.25,
+              group_size: int = GROUP):
+    """x: (B, S, D) -> (B, S, D), plus aux load-balancing loss.
+
+    Grouped GShard dispatch: tokens are split into groups of ``group_size``
+    and capacity is enforced PER GROUP — the dispatch tensor is
+    (B, nG, G, E, C_g) with C_g = cap·G·k/E, so its footprint scales
+    linearly in tokens (a single global capacity buffer would scale
+    quadratically).  The (group, token) -> (expert, slot) einsum is the
+    all-to-all the EP sharding turns into on the mesh.
+    """
+    b, s, d = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    g = min(group_size, s)
+    while s % g:
+        g -= 1
+    ng = s // g
+    cap = max(4, int(cap_factor * g * k / e))
+
+    xg = x.reshape(b, ng, g, d)
+    logits = (xg @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B,nG,G,E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (B,nG,G,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # One-hot expert assignment per slot: (B,nG,G,k,E).
+    assign = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)
+    # Queue position within (group, expert); slot 0 has priority across the
+    # whole group, then slot 1, etc.
+    a_flat = assign.transpose(0, 1, 3, 2, 4).reshape(b, ng, k * g, e)
+    pos = jnp.cumsum(a_flat, axis=2) - a_flat
+    within = (pos < cap) * a_flat
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap,
+                            dtype=jnp.float32) * within[..., None]
+    dispatch = pos_oh.reshape(b, ng, k, g, e, cap).transpose(0, 1, 3, 2, 4, 5)
+    disp_tec = jnp.sum(dispatch, axis=3)                     # (B,nG,G,E,C)
+    comb_tec = jnp.einsum("bgtkec,bgtk->bgtec", dispatch, gate_vals)
+
+    # Dispatch: (B,nG,E,C,D) — with E sharded this is the all-to-all.
+    expert_in = jnp.einsum("bgtec,bgtd->bgecd", disp_tec,
+                           xg.astype(jnp.float32)).astype(x.dtype)
+    h = jnp.einsum("bgecd,edf->bgecf", expert_in, p["wi"].astype(x.dtype))
+    gt = jnp.einsum("bgecd,edf->bgecf", expert_in, p["wg"].astype(x.dtype))
+    h = jax.nn.silu(gt.astype(jnp.float32)).astype(x.dtype) * h
+    expert_out = jnp.einsum("bgecf,efd->bgecd", h, p["wo"].astype(x.dtype))
+
+    out = jnp.einsum("bgtec,bgecd->bgtd", comb_tec,
+                     expert_out.astype(jnp.float32))
+    out = out.reshape(b, s, d).astype(x.dtype)
+
+    # Aux load-balance loss (Switch-style): E * sum_e(frac_tokens*frac_prob)
+    me = jnp.mean(probs, axis=(0, 1, 2))
+    ce = jnp.mean(jnp.sum(assign, axis=3), axis=(0, 1, 2))
+    aux = e * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,306 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention.
+
+recurrentgemma-2b: 26 layers in the cyclic pattern (rec, rec, local-attn);
+MQA (kv=1) with a 2048-token sliding window; GeGLU MLP after every mixer.
+
+RG-LRU recurrence (per channel):
+  r_t = sigmoid(W_a x_t + b_a)           # recurrence gate
+  i_t = sigmoid(W_x x_t + b_x)           # input gate
+  log a_t = -c * softplus(Λ) * r_t       # c = 8
+  h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t ⊙ x_t)
+
+Training uses an associative scan over the sequence (O(log S) depth); decode
+keeps the (B, lru_width) hidden state — O(1) memory in context length, which
+is why this arch (with mamba2) runs the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers
+
+LRU_C = 8.0
+CONV_W = 4
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+
+def rec_block_params(cfg: ModelConfig, key):
+    d, w = cfg.d_model, _lru_width(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "wx": layers.dense_init(ks[0], d, w, dt),
+        "wy": layers.dense_init(ks[1], d, w, dt),
+        "conv_w": (jax.random.normal(ks[2], (CONV_W, w), jnp.float32)
+                   * 0.5).astype(dt),
+        "conv_b": jnp.zeros((w,), dt),
+        "wa": layers.dense_init(ks[3], w, w, dt),
+        "ba": jnp.zeros((w,), dt),
+        "wi": layers.dense_init(ks[4], w, w, dt),
+        "bi": jnp.zeros((w,), dt),
+        "lam": jnp.full((w,), 2.0, dt),   # softplus(2) ~ 2.1 -> slow decay
+        "wo": layers.dense_init(ks[5], w, d, dt),
+    }
+
+
+def _mixer_group_params(cfg: ModelConfig, key, kind: str):
+    kmix, kmlp = jax.random.split(key)
+    mix = (rec_block_params(cfg, kmix) if kind == "rec"
+           else layers.attention_params(cfg, kmix))
+    return {
+        "ln1": layers.norm_params(cfg),
+        "mix": mix,
+        "ln2": layers.norm_params(cfg),
+        "mlp": layers.mlp_params(cfg, kmlp),
+    }
+
+
+def _layer_plan(cfg: ModelConfig) -> list[str]:
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    return [pat[i % len(pat)] for i in range(cfg.n_layers)]
+
+
+def init_params(cfg: ModelConfig, key):
+    plan = _layer_plan(cfg)
+    ke, kl, *_ = jax.random.split(key, 3)
+    lkeys = jax.random.split(kl, cfg.n_layers)
+    rec_keys = [k for k, t in zip(lkeys, plan) if t == "rec"]
+    attn_keys = [k for k, t in zip(lkeys, plan) if t == "attn"]
+    p = {
+        "embed": layers.embed_init(ke, cfg.vocab, cfg.d_model,
+                                   jnp.dtype(cfg.param_dtype)),
+        "ln_f": layers.norm_params(cfg),
+    }
+    if rec_keys:
+        p["rec"] = jax.vmap(
+            functools.partial(_mixer_group_params, cfg, kind="rec")
+        )(jnp.stack(rec_keys))
+    if attn_keys:
+        p["attn"] = jax.vmap(
+            functools.partial(_mixer_group_params, cfg, kind="attn")
+        )(jnp.stack(attn_keys))
+    return p
+
+
+# --------------------------------------------------------------------------
+# RG-LRU
+# --------------------------------------------------------------------------
+
+
+def _rglru_gates(lp, x):
+    """x: (..., W) -> (log_a, gated input) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ lp["wa"].astype(jnp.float32)
+                       + lp["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf @ lp["wi"].astype(jnp.float32)
+                       + lp["bi"].astype(jnp.float32))
+    log_a = -LRU_C * jax.nn.softplus(lp["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated
+
+
+def _rglru_scan(lp, x):
+    """Sequence RG-LRU via associative scan.  x: (B, S, W)."""
+    a, gated = _rglru_gates(lp, x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype)
+
+
+def _rec_mixer(cfg: ModelConfig, lp, x):
+    """x: (B, S, D) -> (B, S, D)."""
+    xb = x @ lp["wx"].astype(x.dtype)
+    gate = x @ lp["wy"].astype(x.dtype)
+    # causal depthwise conv width 4
+    pads = [(0, 0), (CONV_W - 1, 0), (0, 0)]
+    xp = jnp.pad(xb, pads)
+    w = lp["conv_w"].astype(x.dtype)
+    xb = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(CONV_W)) \
+        + lp["conv_b"].astype(x.dtype)
+    h = _rglru_scan(lp, xb)
+    out = jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype) * h
+    return out @ lp["wo"].astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _block(cfg: ModelConfig, kind: str, lp, x, positions):
+    h = layers.apply_norm(cfg, lp["ln1"], x)
+    if kind == "rec":
+        x = x + _rec_mixer(cfg, lp["mix"], h)
+    else:
+        x = x + layers.attention(cfg, lp["mix"], h, positions,
+                                 local_window=cfg.local_window)
+    h = layers.apply_norm(cfg, lp["ln2"], x)
+    return x + layers.apply_mlp(cfg, lp["mlp"], h)
+
+
+def hidden_states(cfg: ModelConfig, params, x, positions):
+    """Scan over each block kind's stacked params, preserving the cyclic
+    pattern.  The pattern is short-cycled (rec, rec, attn), so we scan the
+    full cycles and unroll the remainder — HLO stays O(pattern), not O(L)."""
+    plan = _layer_plan(cfg)
+    body = _block
+    if cfg.remat:
+        body = layers.remat(cfg, _block, static_argnums=(0, 1))
+
+    pat = cfg.block_pattern or ("rec", "rec", "attn")
+    if not cfg.use_scan:
+        idx = {"rec": 0, "attn": 0}
+        for kind in plan:
+            lp = jax.tree.map(lambda a: a[idx[kind]], params[kind])
+            idx[kind] += 1
+            x = body(cfg, kind, lp, x, positions)
+        return layers.apply_norm(cfg, params["ln_f"], x)
+
+    n_cycles = len(plan) // len(pat)
+    # Split stacked params into the scanned cycles and the unrolled tail.
+    counts = {"rec": 0, "attn": 0}
+    for k in pat:
+        counts[k] += 1
+
+    def take(tree, lo, hi):
+        return jax.tree.map(lambda a: a[lo:hi], tree)
+
+    scanned = {}
+    tails = {}
+    for kind in ("rec", "attn"):
+        if kind not in params:
+            continue
+        n_scan = counts[kind] * n_cycles
+        head = take(params[kind], 0, n_scan)
+        # Regroup (n_scan, ...) -> (n_cycles, per_cycle, ...).
+        scanned[kind] = jax.tree.map(
+            lambda a: a.reshape(n_cycles, counts[kind], *a.shape[1:]), head)
+        tails[kind] = take(params[kind], n_scan, None)
+
+    def cycle_body(carry, cyc):
+        x = carry
+        idx = {"rec": 0, "attn": 0}
+        for kind in pat:
+            lp = jax.tree.map(lambda a: a[idx[kind]], cyc[kind])
+            idx[kind] += 1
+            x = body(cfg, kind, lp, x, positions)
+        return x, None
+
+    if n_cycles:
+        x, _ = jax.lax.scan(cycle_body, x,
+                            {k: v for k, v in scanned.items()})
+
+    # Unrolled tail in pattern order.
+    idx = {"rec": 0, "attn": 0}
+    for kind in plan[n_cycles * len(pat):]:
+        lp = jax.tree.map(lambda a: a[idx[kind]], tails[kind])
+        idx[kind] += 1
+        x = body(cfg, kind, lp, x, positions)
+    return layers.apply_norm(cfg, params["ln_f"], x)
+
+
+def forward(cfg: ModelConfig, params, tokens):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    positions = jnp.arange(tokens.shape[1])[None, :]
+    x = hidden_states(cfg, params, x, positions)
+    return layers.unembed(cfg, params["embed"], x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits = forward(cfg, params, batch["tokens"])
+    labels = batch["labels"]
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss, {"lm_loss": loss}
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Attention blocks: ring-buffer KV of the local window; recurrent
+    blocks: (B, W) hidden + conv history — O(1) in context length."""
+    plan = _layer_plan(cfg)
+    n_rec = sum(k == "rec" for k in plan)
+    n_attn = len(plan) - n_rec
+    w = _lru_width(cfg)
+    hd = cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+    window = min(cfg.local_window or max_seq, max_seq)
+    return {
+        "h": jnp.zeros((n_rec, batch, w), jnp.float32),
+        "conv": jnp.zeros((n_rec, batch, CONV_W - 1, w), dt),
+        "k": jnp.zeros((n_attn, batch, window, cfg.kv_heads, hd), dt),
+        "v": jnp.zeros((n_attn, batch, window, cfg.kv_heads, hd), dt),
+    }
+
+
+def _rec_step(cfg, lp, x, h_state, conv_state):
+    """x: (B, D) -> (B, D); O(1) state update."""
+    xb = x @ lp["wx"].astype(x.dtype)
+    gate = x @ lp["wy"].astype(x.dtype)
+    hist = jnp.concatenate([conv_state, xb[:, None, :]], axis=1)
+    w = lp["conv_w"].astype(x.dtype)
+    xb = jnp.einsum("bwc,wc->bc", hist, w) + lp["conv_b"].astype(x.dtype)
+    a, gated = _rglru_gates(lp, xb)
+    h_new = a * h_state + gated
+    out = jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype) \
+        * h_new.astype(x.dtype)
+    return out @ lp["wo"].astype(x.dtype), h_new, hist[:, 1:]
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    plan = _layer_plan(cfg)
+    x = params["embed"][tokens[:, None]].astype(jnp.dtype(cfg.dtype))
+    rec_i = attn_i = 0
+    new = {k: [] for k in ("h", "conv", "k", "v")}
+    for kind in plan:
+        if kind == "rec":
+            lp = jax.tree.map(lambda a: a[rec_i], params["rec"])
+            h = layers.apply_norm(cfg, lp["ln1"], x)
+            y, hs, cs = _rec_step(cfg, lp["mix"], h[:, 0], cache["h"][rec_i],
+                                  cache["conv"][rec_i])
+            x = x + y[:, None]
+            new["h"].append(hs)
+            new["conv"].append(cs)
+            rec_i += 1
+        else:
+            lp = jax.tree.map(lambda a: a[attn_i], params["attn"])
+            h = layers.apply_norm(cfg, lp["ln1"], x)
+            y, ck, cv = layers.attention_decode(
+                cfg, lp["mix"], h, cache["k"][attn_i], cache["v"][attn_i],
+                pos, local_window=cfg.local_window)
+            x = x + y
+            new["k"].append(ck)
+            new["v"].append(cv)
+            attn_i += 1
+        hm = layers.apply_norm(cfg, lp["ln2"], x)
+        x = x + layers.apply_mlp(cfg, lp["mlp"], hm)
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    logits = layers.unembed(cfg, params["embed"], x)[:, 0]
+    new_cache = {k: jnp.stack(v) if v else cache[k] for k, v in new.items()}
+    return logits, new_cache

@@ -1,0 +1,177 @@
+"""Decoder-only transformer LM (dense and MoE) with scan-stacked layers.
+
+Covers qwen2-0.5b, qwen2.5-32b, qwen1.5-32b, nemotron-4-15b, olmoe-1b-7b,
+granite-moe-1b-a400m, and the text backbone of internvl2-26b.
+
+Layers are stacked on a leading axis and traversed with ``lax.scan`` so the
+HLO is O(1) in depth (fast 512-device dry-run compiles); ``cfg.remat``
+wraps the layer body in ``jax.checkpoint`` for training.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers, moe as moe_lib
+
+
+# --------------------------------------------------------------------------
+# Params
+# --------------------------------------------------------------------------
+
+
+def layer_params(cfg: ModelConfig, key):
+    ka, km, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": layers.norm_params(cfg),
+        "attn": layers.attention_params(cfg, ka),
+        "ln2": layers.norm_params(cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.moe_params(cfg, km)
+    else:
+        p["mlp"] = layers.mlp_params(cfg, km)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kl, ku = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    # Params are ALWAYS stacked on a leading layer axis (uniform sharding
+    # rules); cfg.use_scan only selects scan vs. indexed unroll in forward.
+    stacked = jax.vmap(functools.partial(layer_params, cfg))(layer_keys)
+    p = {
+        "embed": layers.embed_init(ke, cfg.vocab, cfg.d_model,
+                                   jnp.dtype(cfg.param_dtype)),
+        "layers": stacked,
+        "ln_f": layers.norm_params(cfg),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = layers.dense_init(ku, cfg.d_model, cfg.vocab,
+                                         jnp.dtype(cfg.param_dtype))
+    return p
+
+
+# --------------------------------------------------------------------------
+# Forward (teacher-forced / prefill)
+# --------------------------------------------------------------------------
+
+
+def _layer_fwd(cfg: ModelConfig, lp, x, positions):
+    h = layers.apply_norm(cfg, lp["ln1"], x)
+    x = x + layers.attention(cfg, lp["attn"], h, positions)
+    h = layers.apply_norm(cfg, lp["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        y, aux = moe_lib.apply_moe(cfg, lp["moe"], h)
+    else:
+        y = layers.apply_mlp(cfg, lp["mlp"], h)
+    return x + y, aux
+
+
+def hidden_states(cfg: ModelConfig, params, x, positions):
+    """Run the layer stack over embeddings x: (B, S, D)."""
+    body = functools.partial(_layer_fwd, cfg)
+    if cfg.remat:
+        body = layers.remat(cfg, body)
+    if cfg.use_scan:
+        def scan_body(carry, lp):
+            y, aux = body(lp, carry, positions)
+            return y, aux
+        x, auxs = jax.lax.scan(scan_body, x, params["layers"])
+        aux = jnp.sum(auxs)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, a = body(lp, x, positions)
+            aux = aux + a
+    return layers.apply_norm(cfg, params["ln_f"], x), aux
+
+
+def forward(cfg: ModelConfig, params, tokens, *, extra_embeddings=None):
+    """tokens: (B, S) -> logits (B, S(+P), vocab).
+
+    ``extra_embeddings`` (B, P, D) are prepended (VLM patch stubs)."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    if extra_embeddings is not None:
+        x = jnp.concatenate(
+            [extra_embeddings.astype(x.dtype), x], axis=1)
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux = hidden_states(cfg, params, x, positions)
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    return layers.unembed(cfg, w, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, aux_weight: float = 0.01):
+    """Cross-entropy LM loss.  batch: {tokens (B,S), labels (B,S)} with
+    labels == -1 masked out; VLM batches add 'patches' (B,P,D)."""
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          extra_embeddings=batch.get("patches"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:       # VLM prefix: score text only
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss + aux_weight * aux, {"lm_loss": loss, "aux_loss": aux}
+
+
+# --------------------------------------------------------------------------
+# Decode (single token with KV cache)
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    hd = cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_seq, cfg.kv_heads, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _layer_decode(cfg: ModelConfig, lp, x, ck, cv, pos):
+    h = layers.apply_norm(cfg, lp["ln1"], x)
+    a, ck, cv = layers.attention_decode(cfg, lp["attn"], h, ck, cv, pos)
+    x = x + a
+    h = layers.apply_norm(cfg, lp["ln2"], x)
+    if cfg.moe is not None:
+        y, _ = moe_lib.apply_moe(cfg, lp["moe"], h)
+    else:
+        y = layers.apply_mlp(cfg, lp["mlp"], h)
+    return x + y, ck, cv
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """tokens: (B,) int32; pos: (B,) current positions.
+    Returns (logits (B, vocab), new_cache)."""
+    x = params["embed"][tokens[:, None]].astype(jnp.dtype(cfg.dtype))
+
+    if cfg.use_scan:
+        def body(carry, inp):
+            x = carry
+            lp, ck, cv = inp
+            x, ck, cv = _layer_decode(cfg, lp, x, ck, cv, pos)
+            return x, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, ck, cv = _layer_decode(cfg, lp, x, cache["k"][i],
+                                      cache["v"][i], pos)
+            ks.append(ck)
+            vs.append(cv)
+        new_cache = {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    w = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = layers.unembed(cfg, w, x)[:, 0]
+    return logits, new_cache

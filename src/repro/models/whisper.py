@@ -1,0 +1,225 @@
+"""Whisper-style encoder-decoder backbone (whisper-tiny assignment).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, n_audio_frames, d_model) — the
+two conv layers that produce them are out of scope.  Everything after that
+is implemented: sinusoidal positions, pre-LN encoder (bidirectional MHA),
+decoder (causal self-attn + cross-attn), GELU MLPs, LayerNorm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import layers
+
+
+def _sinusoid(length: int, d: int) -> jax.Array:
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    inv = jnp.exp(-jnp.log(10000.0) * dim / (d // 2))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def enc_layer_params(cfg: ModelConfig, key):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": layers.norm_params(cfg),
+        "attn": layers.attention_params(cfg, ka),
+        "ln2": layers.norm_params(cfg),
+        "mlp": layers.mlp_params(cfg, km),
+    }
+
+
+def dec_layer_params(cfg: ModelConfig, key):
+    ka, kx, km = jax.random.split(key, 3)
+    return {
+        "ln1": layers.norm_params(cfg),
+        "self": layers.attention_params(cfg, ka),
+        "ln_x": layers.norm_params(cfg),
+        "cross": layers.attention_params(cfg, kx),
+        "ln2": layers.norm_params(cfg),
+        "mlp": layers.mlp_params(cfg, km),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    ke, kenc, kdec = jax.random.split(key, 3)
+    n_enc = cfg.enc_layers or cfg.n_layers
+    enc_keys = jax.random.split(kenc, n_enc)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": layers.embed_init(ke, cfg.vocab, cfg.d_model,
+                                   jnp.dtype(cfg.param_dtype)),
+        "enc": jax.vmap(functools.partial(enc_layer_params, cfg))(enc_keys),
+        "enc_ln_f": layers.norm_params(cfg),
+        "dec": jax.vmap(functools.partial(dec_layer_params, cfg))(dec_keys),
+        "ln_f": layers.norm_params(cfg),
+    }
+
+
+# --------------------------------------------------------------------------
+# Cross attention (no RoPE, encoder-side KV)
+# --------------------------------------------------------------------------
+
+
+def _cross_attention(cfg: ModelConfig, p, x, enc_kv):
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k, v = enc_kv
+    out = layers._sdpa(cfg, q, k, v, causal=False, cross=True)
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def _enc_kv(cfg: ModelConfig, p, enc_out):
+    b, t, _ = enc_out.shape
+    hd = cfg.head_dim_
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(
+        b, t, cfg.kv_heads, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(
+        b, t, cfg.kv_heads, hd)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: (B, T, D) stub embeddings -> encoder states (B, T, D)."""
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(lp, x):
+        h = layers.apply_norm(cfg, lp["ln1"], x)
+        x = x + layers.attention(cfg, lp["attn"], h, positions, causal=False)
+        h = layers.apply_norm(cfg, lp["ln2"], x)
+        return x + layers.apply_mlp(cfg, lp["mlp"], h)
+
+    if cfg.remat:
+        body = layers.remat(cfg, body)
+
+    if cfg.use_scan:
+        x, _ = jax.lax.scan(lambda c, lp: (body(lp, c), None), x,
+                            params["enc"])
+    else:
+        for i in range(cfg.enc_layers or cfg.n_layers):
+            x = body(jax.tree.map(lambda a: a[i], params["enc"]), x)
+    return layers.apply_norm(cfg, params["enc_ln_f"], x)
+
+
+def decode(cfg: ModelConfig, params, tokens, enc_out):
+    """Teacher-forced decoder: tokens (B, S) -> logits."""
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x = x + _sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+    positions = jnp.arange(tokens.shape[1])[None, :]
+
+    def body(lp, x):
+        h = layers.apply_norm(cfg, lp["ln1"], x)
+        x = x + layers.attention(cfg, lp["self"], h, positions, causal=True)
+        h = layers.apply_norm(cfg, lp["ln_x"], x)
+        x = x + _cross_attention(cfg, lp["cross"], h,
+                                 _enc_kv(cfg, lp["cross"], enc_out))
+        h = layers.apply_norm(cfg, lp["ln2"], x)
+        return x + layers.apply_mlp(cfg, lp["mlp"], h)
+
+    if cfg.remat:
+        body = layers.remat(cfg, body)
+
+    if cfg.use_scan:
+        x, _ = jax.lax.scan(lambda c, lp: (body(lp, c), None), x,
+                            params["dec"])
+    else:
+        for i in range(cfg.n_layers):
+            x = body(jax.tree.map(lambda a: a[i], params["dec"]), x)
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    return layers.unembed(cfg, params["embed"], x)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    return decode(cfg, params, batch["tokens"], enc_out)
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits = forward(cfg, params, batch)
+    labels = batch["labels"]
+    mask = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(lp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss, {"lm_loss": loss}
+
+
+# --------------------------------------------------------------------------
+# Decode (incremental, with self-KV cache + precomputed cross-KV)
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+               enc_out=None, params=None):
+    hd = cfg.head_dim_
+    dt = jnp.dtype(cfg.dtype)
+    shape = (cfg.n_layers, batch, max_seq, cfg.kv_heads, hd)
+    cache = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    if enc_out is not None:
+        xk, xv = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["dec"])
+            k, v = _enc_kv(cfg, lp["cross"], enc_out)
+            xk.append(k)
+            xv.append(v)
+        cache["xk"] = jnp.stack(xk)
+        cache["xv"] = jnp.stack(xv)
+    else:
+        t = cfg.n_audio_frames
+        cache["xk"] = jnp.zeros((cfg.n_layers, batch, t, cfg.kv_heads, hd),
+                                dt)
+        cache["xv"] = jnp.zeros((cfg.n_layers, batch, t, cfg.kv_heads, hd),
+                                dt)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    x = params["embed"][tokens[:, None]].astype(jnp.dtype(cfg.dtype))
+    pe = _sinusoid(int(cache["k"].shape[2]), cfg.d_model).astype(x.dtype)
+    x = x + pe[pos][:, None]
+
+    def body(carry, inp):
+        x = carry
+        lp, ck, cv, xk, xv = inp
+        h = layers.apply_norm(cfg, lp["ln1"], x)
+        a, ck, cv = layers.attention_decode(cfg, lp["self"], h, ck, cv, pos)
+        x = x + a
+        h = layers.apply_norm(cfg, lp["ln_x"], x)
+        x = x + _cross_attention(cfg, lp["cross"], h, (xk, xv))
+        h = layers.apply_norm(cfg, lp["ln2"], x)
+        x = x + layers.apply_mlp(cfg, lp["mlp"], h)
+        return x, (ck, cv)
+
+    if cfg.use_scan:
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["dec"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+    else:
+        ks_l, vs_l = [], []
+        for i in range(cfg.n_layers):
+            inp = jax.tree.map(lambda a: a[i],
+                               (params["dec"], cache["k"], cache["v"],
+                                cache["xk"], cache["xv"]))
+            x, (ck, cv) = body(x, inp)
+            ks_l.append(ck)
+            vs_l.append(cv)
+        ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+    x = layers.apply_norm(cfg, params["ln_f"], x)
+    logits = layers.unembed(cfg, params["embed"], x)[:, 0]
+    return logits, {**cache, "k": ks, "v": vs}

@@ -1,0 +1,8 @@
+from .adamw import AdamWState, adamw_init, adamw_update, global_norm
+from .schedules import constant, cosine_schedule, linear_warmup
+from .compression import (compress_int8, decompress_int8,
+                          error_feedback_compress)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "global_norm",
+           "constant", "cosine_schedule", "linear_warmup",
+           "compress_int8", "decompress_int8", "error_feedback_compress"]

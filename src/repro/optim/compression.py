@@ -1,0 +1,50 @@
+"""Gradient compression for cross-pod reduction (distributed-optimization
+trick): int8 block quantization with error feedback.
+
+At 512+ chips the inter-pod all-reduce of f32 gradients is the dominant
+collective-roofline term; int8 halves-to-quarters the wire bytes.  Error
+feedback (Seide et al.) keeps the quantization bias out of the long-run
+trajectory: the residual e is added back before the next quantization.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def compress_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """g -> (int8 values, f32 per-block scales)."""
+    flat, _ = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array, shape, dtype
+                    ) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def error_feedback_compress(g: jax.Array, err: jax.Array
+                            ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize (g + err); return (q, scale, new_err)."""
+    corrected = g.astype(jnp.float32) + err.astype(jnp.float32)
+    q, scale = compress_int8(corrected)
+    deq = decompress_int8(q, scale, g.shape, jnp.float32)
+    new_err = corrected - deq
+    return q, scale, new_err.astype(err.dtype)

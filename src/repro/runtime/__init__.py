@@ -1,0 +1,12 @@
+from . import loop, overlap_schedule, sharding, steps, straggler
+from .loop import SimulatedFailure, run_with_restarts, train_loop
+from .steps import (TrainState, build_serve_step, build_train_step,
+                    init_train_state, jit_serve_step, jit_train_step,
+                    train_state_shardings)
+
+__all__ = [
+    "loop", "overlap_schedule", "sharding", "steps", "straggler",
+    "SimulatedFailure", "run_with_restarts", "train_loop", "TrainState",
+    "build_serve_step", "build_train_step", "init_train_state",
+    "jit_serve_step", "jit_train_step", "train_state_shardings",
+]

@@ -1,0 +1,63 @@
+"""Overlap scheduler: decides compute/collective co-scheduling using the
+paper's bandwidth-sharing model (core/overlap.py).
+
+Given the roofline decomposition of a training step (from the dry-run HLO or
+from analytic estimates), it answers:
+  * should the gradient reduce-scatter overlap the backward pass at all?
+  * if so, into how many buckets should it be split?
+  * what is the predicted step time under each policy?
+
+The classical heuristic ("always overlap, assume it's free") over-predicts
+speedup when the collective's HBM drain contends with the backward matmuls'
+streams — exactly the effect the paper models with Eqs. 4–5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..configs.base import ModelConfig
+from ..core.hlo import RooflineTerms
+from ..core.machine import TPU_V5E, TpuModel
+from ..core.overlap import Phase, best_bucket_count, overlap_pair
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPlan:
+    overlap: bool
+    n_buckets: int
+    t_serial: float
+    t_planned: float
+    t_naive_roofline: float     # what "perfect overlap" would promise
+
+    @property
+    def predicted_gain(self) -> float:
+        return self.t_serial / self.t_planned if self.t_planned else 1.0
+
+
+def plan_gradient_overlap(terms: RooflineTerms, *,
+                          backward_frac: float = 2 / 3,
+                          tpu: TpuModel = TPU_V5E) -> OverlapPlan:
+    """Build the overlap plan from a step's roofline terms.
+
+    ``backward_frac``: share of compute/HBM belonging to the backward pass
+    (2/3 for standard fwd+bwd without remat; remat shifts it higher).
+    """
+    bwd = Phase("bwd",
+                flops=terms.flops * backward_frac,
+                hbm_bytes=terms.hbm_bytes * backward_frac)
+    # The gradient collective: its wire bytes on ICI, and an HBM drain of
+    # the same magnitude (send buffers are read + recv written once).
+    coll = Phase("grad_rs",
+                 ici_bytes=terms.wire_bytes,
+                 hbm_bytes=2.0 * terms.wire_bytes)
+    t_serial = bwd.t_solo(tpu) + coll.t_solo(tpu)
+    nb, t_planned = best_bucket_count(bwd, coll, tpu=tpu)
+    pred = overlap_pair(bwd, coll, tpu)
+    return OverlapPlan(
+        overlap=nb > 0 and t_planned < t_serial * 0.995,
+        n_buckets=max(nb, 1),
+        t_serial=t_serial,
+        t_planned=min(t_planned, t_serial),
+        t_naive_roofline=pred.t_naive,
+    )

@@ -1,0 +1,224 @@
+"""Sharding rules: parameter/optimizer/batch/cache PartitionSpecs.
+
+Scheme (Megatron + FSDP hybrid, per assigned mesh):
+  mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+  * TP over "model": attention heads (column-shard wq/wk/wv, row-shard wo),
+    MLP ff (column wi/wg, row wo), vocab (embed rows, unembed cols), MoE
+    experts (EP), SSD/LRU channels.
+  * DP/FSDP over ("pod", "data"): the batch dimension always; additionally
+    the largest weight dim of big dense archs is FSDP-sharded (ZeRO-3 —
+    optimizer state inherits it for free since it mirrors params).
+  * Scan-stacked params carry a leading layer axis: specs below are written
+    WITHOUT it and get None prepended automatically for stacked trees.
+
+All rules are path-regex -> PartitionSpec; unlisted tensors replicate.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+# dp: the (pod, data) superaxis; tp: "model".
+
+
+def _dp(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def param_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool | None = None
+                ) -> list[tuple[str, P]]:
+    """Ordered (regex, spec) rules over '/'-joined param paths."""
+    dp = _dp(mesh)
+    if fsdp is None:
+        # FSDP for the big dense archs; small models replicate over dp.
+        fsdp = cfg.param_count() * 4 > 4e9
+    row = P("model", None)       # (in_sharded, out)
+    col = P(None, "model")       # (in, out_sharded)
+    col_f = P(dp, "model") if fsdp else col
+    row_f = P("model", dp) if fsdp else row
+
+    rules: list[tuple[str, P]] = [
+        # embeddings: vocab-parallel
+        (r"embed$", P("model", None)),
+        (r"unembed$", col_f),
+        # attention
+        (r"attn/wq$|self/wq$|cross/wq$|mix/wq$", col_f),
+        (r"attn/wk$|self/wk$|cross/wk$|mix/wk$", col),
+        (r"attn/wv$|self/wv$|cross/wv$|mix/wv$", col),
+        (r"attn/wo$|self/wo$|cross/wo$|mix/wo$", row_f),
+        (r"/b[qkv]$", P("model")),
+        # dense MLP
+        (r"mlp/wi$|mlp/wg$", col_f),
+        (r"mlp/wo$", row_f),
+        # MoE: experts over "model" (EP); router replicated
+        (r"moe/wi$|moe/wg$|moe/wo$", P("model", None, None)),
+        (r"moe/router$", P()),
+        # Mamba2 SSD
+        (r"/wz$|/wx$", col),
+        (r"/wb$|/wc$|/wdt$", P()),
+        (r"conv_x$", P(None, "model")),
+        (r"conv_xb$", P("model")),
+        (r"out_proj$", row),
+        (r"out_ln/w$", P("model")),
+        # RG-LRU (recurrentgemma)
+        (r"mix/wy$", col),
+        (r"mix/conv_w$", P(None, "model")),
+        (r"mix/conv_b$", P("model")),
+        (r"mix/wa$|mix/wi$", P(None, "model")),
+        (r"mix/ba$|mix/bi$|mix/lam$", P("model")),
+        (r"mix/wo$", row),
+    ]
+    return rules
+
+
+def _spec_for(path: str, rules, *, stacked: bool) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path):
+            if stacked:
+                return P(None, *spec)
+            return spec
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape, *,
+                    fsdp: bool | None = None, dp_only: bool = False):
+    """Pytree of NamedShardings matching a params (shape) tree.
+
+    Detects scan-stacking by path: anything under 'layers/', 'rec/',
+    'attn/' (top-level), 'enc/', 'dec/' carries a leading layer axis.
+
+    ``dp_only``: no tensor parallelism — params are FSDP-sharded over ALL
+    mesh axes on their largest dimension (so the batch can use the full
+    mesh as data parallelism).  The right strategy when the arch's head
+    count doesn't divide the model axis (qwen2-0.5b: 14 heads vs 16-way
+    TP would replicate the whole attention computation 16x).
+    """
+    if dp_only:
+        all_axes = tuple(mesh.axis_names)
+
+        def assign_dp(path, leaf):
+            shape = leaf.shape
+            if not shape:
+                return NamedSharding(mesh, P())
+            # Shard the largest dim over all axes jointly, if divisible.
+            dim = max(range(len(shape)), key=lambda i: shape[i])
+            spec = [None] * len(shape)
+            spec[dim] = all_axes
+            return NamedSharding(mesh, _validate(P(*spec), shape, mesh))
+
+        return jax.tree_util.tree_map_with_path(assign_dp, params_shape)
+
+    rules = param_rules(cfg, mesh, fsdp=fsdp)
+    stacked_roots = ("layers", "rec", "attn", "enc", "dec")
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        stacked = ps.split("/", 1)[0] in stacked_roots
+        spec = _spec_for(ps, rules, stacked=stacked)
+        spec = _validate(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    shape = dict(mesh.shape)
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= shape.get(a, 1)
+        return n
+    return shape.get(axis, 1)
+
+
+def _validate(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the tensor can't divide (e.g. kv_heads < tp)."""
+    new = []
+    for i, axis in enumerate(spec):
+        if i >= len(shape):
+            break
+        size = _axis_size(mesh, axis)
+        if axis is not None and (size == 0 or shape[i] % size):
+            new.append(None)
+        else:
+            new.append(axis)
+    return P(*new)
+
+
+def batch_shardings(mesh: Mesh, batch_specs: dict, *, dp_only: bool = False):
+    """Global batch: leading dim over (pod, data) — or over ALL axes in
+    dp_only mode (falling back to (pod, data) when the batch can't divide
+    the full mesh)."""
+    if dp_only:
+        # Prefer the widest divisible axis combination.
+        candidates = [tuple(mesh.axis_names),
+                      tuple(a for a in ("data", "model")
+                            if a in mesh.axis_names),
+                      _dp(mesh)]
+    else:
+        candidates = [_dp(mesh)]
+    out = {}
+    for k, v in batch_specs.items():
+        axes = candidates[-1]
+        for cand in candidates:
+            if v.shape and v.shape[0] % _axis_size(mesh, cand) == 0:
+                axes = cand
+                break
+        spec = [axes] + [None] * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, _validate(P(*spec), v.shape, mesh))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape):
+    """KV/state caches for decode.
+
+    Layout: (L, B, S, KV, hd) attention caches — batch over dp, then prefer
+    sharding KV heads over "model"; if KV heads don't divide the TP width
+    (MQA), shard the *sequence* axis instead (context parallelism: XLA
+    inserts the softmax-combine collectives).
+    SSM/LRU states: (L, B, ...) — batch over dp, channels over model.
+    """
+    dp = _dp(mesh)
+    tp = mesh.shape["model"]
+
+    def assign(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        if ps.endswith("k") or ps.endswith("v") or "xk" in ps or "xv" in ps:
+            # (L, B, S, KV, hd)
+            kv = shape[3] if len(shape) == 5 else 0
+            if kv and kv % tp == 0:
+                spec = P(None, dp, None, "model", None)
+            else:
+                spec = P(None, dp, "model", None, None)
+        elif "ssm" in ps:
+            # (L, B, H, N, P): heads over model
+            spec = P(None, dp, "model", None, None)
+        elif "conv" in ps:
+            spec = P(None, dp, None, "model")
+        elif ps.endswith("h"):           # RG-LRU hidden (L, B, W)
+            spec = P(None, dp, "model")
+        else:
+            spec = P(*([None] * len(shape)))
+        return NamedSharding(mesh, _validate(spec, shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(assign, cache_shape)

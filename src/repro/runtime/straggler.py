@@ -1,0 +1,84 @@
+"""Straggler monitor: the paper's desynchronization theory applied to
+data-parallel workers.
+
+The paper's key dynamical result: when a step phase overlaps (across
+workers) with a *higher-f* follow-up phase, worker skew is AMPLIFIED
+(positive skewness); overlap with idleness (a barrier / allreduce wait)
+RESYNCHRONIZES.  For a barrier-free async-ish training loop this predicts
+whether skew grows without bound — and hence when to inject a sync barrier.
+
+``StragglerMonitor`` tracks per-worker step durations, estimates the skew
+trend, and consults the desync simulator for the amplification sign.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Sequence
+
+from ..core.desync import (Allreduce, DesyncSimulator, Idle, Work,
+                           durations_by_tag, skewness)
+from ..core.sharing import Group
+
+
+@dataclasses.dataclass
+class StepPhase:
+    """One phase of the training step, as seen by the contention model."""
+    name: str
+    bytes_hbm: float
+    f: float            # request fraction of the phase
+    bs: float           # envelope bandwidth (GB/s)
+
+
+class StragglerMonitor:
+    """Decides when to inject a barrier based on observed skew + theory."""
+
+    def __init__(self, n_workers: int, *, window: int = 32,
+                 skew_limit: float = 1.0):
+        self.n_workers = n_workers
+        self.window = window
+        self.skew_limit = skew_limit
+        self._durations: deque[Sequence[float]] = deque(maxlen=window)
+
+    def record(self, step_durations: Sequence[float]):
+        self._durations.append(tuple(step_durations))
+
+    @property
+    def observed_skew(self) -> float:
+        if not self._durations:
+            return 0.0
+        per_worker = [sum(d[i] for d in self._durations)
+                      for i in range(self.n_workers)]
+        return skewness(per_worker)
+
+    def should_inject_barrier(self) -> bool:
+        return abs(self.observed_skew) > self.skew_limit and \
+            self.observed_skew > 0
+
+    def predict_amplification(self, phases: Sequence[StepPhase], *,
+                              probe: int = 1) -> float:
+        """Simulate a barrier-free loop of the given phases and return the
+        skewness of phase[probe]'s accumulated time — positive means the
+        configuration amplifies desync and needs periodic barriers."""
+        import random
+        rng = random.Random(0)
+        specs = {}
+        from ..core.table2 import KernelSpec
+        for ph in phases:
+            specs[ph.name] = KernelSpec(
+                name=ph.name, body="", reads=1, writes=0, rfo=0,
+                flops_per_iter=1,
+                f={"TPU": ph.f}, bs={"TPU": ph.bs})
+        progs = []
+        for w in range(self.n_workers):
+            # One barrier-free iteration after established skew — the
+            # paper's Fig. 3 setting (multi-iteration feedback forms
+            # computational wavefronts that mix the signal).
+            prog = [Idle(rng.expovariate(1 / 5e-5), tag="noise")]
+            prog += [Work(ph.name, ph.bytes_hbm, tag=ph.name)
+                     for ph in phases]
+            progs.append(prog)
+        sim = DesyncSimulator(progs, "TPU", specs=specs)
+        recs = sim.run(t_max=120.0)
+        return skewness(durations_by_tag(recs, phases[probe].name))

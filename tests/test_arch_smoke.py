@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+loss / decode step on CPU; asserts shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model_for
+
+ARCHS = [a for a in configs.ARCH_IDS]
+
+
+def _batch(cfg, b=2, s=16, key=0):
+    rng = np.random.default_rng(key)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_audio_frames, cfg.d_model)),
+            jnp.float32) * 0.1
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_patches, cfg.d_model)),
+            jnp.float32) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_step(arch):
+    cfg = configs.get_reduced(arch)
+    model = model_for(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_grad_step(arch):
+    cfg = configs.get_reduced(arch)
+    model = model_for(cfg)
+    params = model.init(jax.random.key(1))
+    batch = _batch(cfg, key=1)
+
+    def scalar_loss(p):
+        return model.loss(p, batch)[0]
+
+    grads = jax.jit(jax.grad(scalar_loss))(params)
+    leaves = jax.tree.leaves(grads)
+    assert leaves, f"{arch}: empty grads"
+    for g in leaves:
+        assert jnp.all(jnp.isfinite(g)), f"{arch}: non-finite grad"
+    # At least some gradient signal somewhere.
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in leaves)
+    assert total > 0, f"{arch}: all-zero grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = configs.get_reduced(arch)
+    model = model_for(cfg)
+    params = model.init(jax.random.key(2))
+    b, max_seq = 2, 32
+    cache = model.init_cache(b, max_seq)
+    tokens = jnp.zeros((b,), jnp.int32)
+    pos = jnp.zeros((b,), jnp.int32)
+    step = jax.jit(model.decode_step)
+    for t in range(3):
+        logits, cache = step(params, cache, tokens, pos)
+        assert logits.shape == (b, cfg.vocab)
+        assert jnp.all(jnp.isfinite(logits)), f"{arch}: non-finite logits"
+        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos = pos + 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_exact_numbers(arch):
+    """The full (published) config fields match the assignment sheet."""
+    cfg = configs.get_config(arch)
+    expected = {
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "nemotron-4-15b": (32, 6144, 48, 8, 24576, 256000),
+        "mamba2-1.3b": (48, 2048, 1, 1, 0, 50280),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == expected
+
+
+def test_moe_configs():
+    olmoe = configs.get_config("olmoe-1b-7b")
+    assert (olmoe.moe.n_experts, olmoe.moe.top_k) == (64, 8)
+    granite = configs.get_config("granite-moe-1b-a400m")
+    assert (granite.moe.n_experts, granite.moe.top_k) == (32, 8)
+
+
+def test_mamba_ssm_state():
+    cfg = configs.get_config("mamba2-1.3b")
+    assert cfg.ssm_state == 128
+    assert cfg.is_attention_free
+
+
+def test_long_context_support_flags():
+    assert configs.get_config("recurrentgemma-2b").supports_long_context
+    assert configs.get_config("mamba2-1.3b").supports_long_context
+    for a in ("qwen2-0.5b", "qwen2.5-32b", "nemotron-4-15b"):
+        assert not configs.get_config(a).supports_long_context

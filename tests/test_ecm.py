@@ -1,0 +1,73 @@
+"""Tests for the ECM model (paper Eqs. 1-3) and the multicore scaling curve."""
+
+import pytest
+
+from repro.core import ecm, table2
+from repro.core.machine import X86_MACHINES
+
+
+@pytest.mark.parametrize("arch", sorted(X86_MACHINES))
+@pytest.mark.parametrize("name", ["DDOT2", "DCOPY", "STREAM", "Schoenauer"])
+def test_f_prediction_in_range(arch, name):
+    spec = table2.kernel(name)
+    pred = ecm.predict(spec, X86_MACHINES[arch])
+    assert 0.0 < pred.f <= 1.0
+
+
+def test_rome_overlap_composition():
+    """Rome's overlapping hierarchy makes streaming kernels memory-bound with
+    f -> 1 (paper: 'on AMD Rome ... it is often close to one')."""
+    spec = table2.kernel("STREAM")
+    pred = ecm.predict(spec, X86_MACHINES["ROME"])
+    assert pred.f > 0.9
+
+
+def test_intel_serial_composition():
+    """Intel's non-overlapping transfers keep f well below one (Eq. 1)."""
+    spec = table2.kernel("STREAM")
+    for arch in ("BDW-1", "BDW-2", "CLX"):
+        pred = ecm.predict(spec, X86_MACHINES[arch])
+        assert pred.f < 0.6
+        # Serial composition: T_ECM >= T_Mem + caches + L1Reg.
+        assert pred.t_ecm == pytest.approx(
+            pred.t_mem + sum(pred.t_cache) + pred.t_l1reg)
+
+
+def test_ecm_f_ordering_matches_table():
+    """The analytic path need not match measured f absolutely (a global
+    factor cancels in Eq. 5 — paper Sect. V), but the ordering across
+    kernels must agree."""
+    for arch in ("BDW-1", "BDW-2", "CLX"):
+        m = X86_MACHINES[arch]
+        f_ecm = {n: ecm.predict(table2.kernel(n), m).f
+                 for n in ("DDOT2", "DCOPY", "DSCAL")}
+        f_tab = {n: table2.kernel(n).f[arch] for n in f_ecm}
+        assert (f_ecm["DSCAL"] > f_ecm["DDOT2"]) == (
+            f_tab["DSCAL"] > f_tab["DDOT2"])
+        assert (f_ecm["DCOPY"] > f_ecm["DDOT2"]) == (
+            f_tab["DCOPY"] > f_tab["DDOT2"])
+
+
+def test_scaling_curve_saturates():
+    u = ecm.scaling_curve(f=0.25, t_mem=0.25, t_ecm=1.0, n_max=32)
+    assert u[0] == pytest.approx(0.25)
+    assert all(b >= a - 1e-12 for a, b in zip(u, u[1:]))  # monotone
+    assert u[-1] == pytest.approx(1.0, abs=1e-6) or u[-1] <= 1.0
+    assert u[-1] > 0.95
+
+
+def test_scaling_curve_latency_penalty_slows_ramp():
+    """Larger p0 -> slower approach to saturation."""
+    u_fast = ecm.scaling_curve(0.3, 0.3, 1.0, 10, p0_factor=0.0)
+    u_slow = ecm.scaling_curve(0.3, 0.3, 1.0, 10, p0_factor=1.0)
+    assert u_fast[4] > u_slow[4]
+    # With no penalty the ramp is exactly linear until saturation.
+    assert u_fast[1] == pytest.approx(0.6)
+
+
+def test_bandwidth_vs_cores_saturates_at_bs():
+    spec = table2.kernel("DDOT2")
+    bw = ecm.bandwidth_vs_cores(spec, "CLX", 20)
+    assert bw[0] == pytest.approx(spec.single_core_bw("CLX"))
+    assert bw[-1] <= spec.bs["CLX"] * 1.0001
+    assert bw[-1] > 0.9 * spec.bs["CLX"]

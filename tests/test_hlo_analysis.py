@@ -1,0 +1,93 @@
+"""Tests for HLO collective parsing and roofline-term construction."""
+
+import pytest
+
+from repro.core.hlo import (CollectiveStats, RooflineTerms, collective_stats,
+                            roofline_terms)
+from repro.core.machine import TPU_V5E
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+ENTRY main {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[512,256]{1,0} all-gather(f32[128,256]{1,0} %ar), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = bf16[32,256]{1,0} reduce-scatter(bf16[128,256]{1,0} %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %cp = f32[512,256]{1,0} collective-permute(f32[512,256]{1,0} %ag), source_target_pairs={{0,1},{1,2}}
+  %a2a = f32[512,256]{1,0} all-to-all(f32[512,256]{1,0} %cp), replica_groups={{0,1,2,3}}
+  ROOT %done = f32[128,256]{1,0} add(%p0, %p0)
+}
+"""
+
+
+def test_counts():
+    s = collective_stats(HLO_SAMPLE)
+    assert s.counts == {"all-reduce": 1, "all-gather": 1, "reduce-scatter": 1,
+                        "collective-permute": 1, "all-to-all": 1}
+
+
+def test_operand_bytes():
+    s = collective_stats(HLO_SAMPLE)
+    f32_128_256 = 128 * 256 * 4
+    assert s.operand_bytes["all-reduce"] == f32_128_256
+    assert s.operand_bytes["all-gather"] == f32_128_256
+    assert s.operand_bytes["reduce-scatter"] == 128 * 256 * 2
+    assert s.operand_bytes["collective-permute"] == 512 * 256 * 4
+
+
+def test_wire_bytes_ring_model():
+    s = collective_stats(HLO_SAMPLE)
+    f32_128_256 = 128 * 256 * 4
+    ring = 3 / 4
+    assert s.wire_bytes["all-reduce"] == pytest.approx(2 * f32_128_256 * ring)
+    # all-gather wire bytes charge the (bigger) result.
+    assert s.wire_bytes["all-gather"] == pytest.approx(
+        512 * 256 * 4 * ring)
+    assert s.wire_bytes["reduce-scatter"] == pytest.approx(
+        128 * 256 * 2 * ring)
+    assert s.wire_bytes["collective-permute"] == pytest.approx(512 * 256 * 4)
+
+
+def test_async_start_done_counted_once():
+    text = """
+  %ags = (f32[128]{0}, f32[512]{0}) all-gather-start(f32[128]{0} %x), replica_groups={{0,1,2,3}}
+  %agd = f32[512]{0} all-gather-done((f32[128]{0}, f32[512]{0}) %ags)
+"""
+    s = collective_stats(text)
+    assert s.counts.get("all-gather", 0) == 1
+
+
+def test_no_collectives():
+    s = collective_stats("ENTRY main { ROOT %x = f32[2]{0} parameter(0) }")
+    assert s.total_wire_bytes == 0
+    assert s.counts == {}
+
+
+def test_roofline_terms_dominance():
+    stats = CollectiveStats(counts={}, operand_bytes={}, wire_bytes={})
+    # Memory-bound case: 819 GB moved per device, tiny flops.
+    t = roofline_terms("x", {"flops": 1e9, "bytes accessed": 819e9},
+                       stats, n_chips=256, model_flops_total=1e9 * 256)
+    assert t.dominant == "memory"
+    assert t.t_memory == pytest.approx(1.0)
+    assert t.hbm_bytes == pytest.approx(819e9)
+
+
+def test_roofline_fraction_useful_flops():
+    stats = CollectiveStats(counts={}, operand_bytes={}, wire_bytes={})
+    cost = {"flops": 2 * 197e12, "bytes accessed": 1e9}
+    t = roofline_terms("x", cost, stats, n_chips=1,
+                       model_flops_total=197e12)
+    # Half the compiled flops are useful; compute-bound; fraction = 0.5.
+    assert t.dominant == "compute"
+    assert t.roofline_fraction == pytest.approx(0.5)
+    assert t.useful_flop_ratio == pytest.approx(0.5)
+
+
+def test_group_size_v2_form():
+    text = ("%ar = f32[64]{0} all-reduce(f32[64]{0} %x), "
+            "replica_groups=[2,128]<=[256]")
+    s = collective_stats(text)
+    ring = 127 / 128
+    assert s.wire_bytes["all-reduce"] == pytest.approx(2 * 64 * 4 * ring)

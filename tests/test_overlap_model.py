@@ -1,0 +1,75 @@
+"""Tests for the TPU overlap-aware step model (beyond-paper application)."""
+
+import pytest
+
+from repro.core.machine import TPU_V5E
+from repro.core.overlap import Phase, best_bucket_count, overlap_pair
+
+
+def test_phase_roofline_times():
+    p = Phase("x", flops=197e12, hbm_bytes=0.0)
+    assert p.t_solo() == pytest.approx(1.0)
+    p = Phase("m", hbm_bytes=819e9)
+    assert p.t_solo() == pytest.approx(1.0)
+    p = Phase("c", ici_bytes=4 * 50e9)
+    assert p.t_solo() == pytest.approx(1.0)
+
+
+def test_request_fraction():
+    # Perfectly compute-bound: f ~ ratio of mem time to total.
+    p = Phase("mm", flops=197e12, hbm_bytes=819e9 / 2)
+    assert p.request_fraction() == pytest.approx(0.5)
+    p = Phase("stream", hbm_bytes=819e9)
+    assert p.request_fraction() == pytest.approx(1.0)
+
+
+def test_compute_plus_collective_overlaps_well():
+    """A compute-bound phase (low f) and an ICI-bound collective (tiny HBM
+    demand) overlap almost perfectly."""
+    comp = Phase("bwd", flops=1e12, hbm_bytes=1e9)      # f ~ 0.24
+    coll = Phase("rs", ici_bytes=1e9, hbm_bytes=1e8)    # ICI-bound
+    pred = overlap_pair(comp, coll)
+    assert pred.t_overlap < pred.t_serial * 0.75
+    assert pred.t_overlap >= pred.t_naive * 0.999
+
+
+def test_two_memory_bound_phases_dont_overlap():
+    """Two HBM-saturating streams: sharing model says overlap ~ serial
+    (the classical 'perfect overlap' roofline would wrongly claim 2x)."""
+    a = Phase("a", hbm_bytes=1e9)
+    b = Phase("b", hbm_bytes=1e9)
+    pred = overlap_pair(a, b)
+    assert pred.t_overlap == pytest.approx(pred.t_serial, rel=0.05)
+    assert pred.t_naive == pytest.approx(pred.t_serial / 2, rel=1e-6)
+    assert not pred.worthwhile
+
+
+def test_overlap_never_worse_than_serial_or_better_than_naive():
+    cases = [
+        (Phase("a", flops=5e12, hbm_bytes=2e9), Phase("b", ici_bytes=5e8)),
+        (Phase("a", hbm_bytes=3e9), Phase("b", flops=9e13, hbm_bytes=1e8)),
+        (Phase("a", hbm_bytes=1e9, ici_bytes=1e9), Phase("b", hbm_bytes=1e9)),
+    ]
+    for a, b in cases:
+        pred = overlap_pair(a, b)
+        assert pred.t_overlap <= pred.t_serial * (1 + 1e-9)
+        assert pred.t_overlap >= pred.t_naive * (1 - 1e-9)
+
+
+def test_bucket_count_for_gradient_reduce():
+    """Typical FSDP backward: compute-bound backward + ICI reduce-scatter.
+    Bucketing should find overlap worthwhile with >= 1 bucket."""
+    bwd = Phase("bwd", flops=50e12, hbm_bytes=10e9)
+    rs = Phase("rs", ici_bytes=8e9, hbm_bytes=2e9)
+    nb, t = best_bucket_count(bwd, rs)
+    assert nb >= 1
+    assert t < bwd.t_solo() + rs.t_solo()
+
+
+def test_bucket_count_skips_hopeless_overlap():
+    """Two fully HBM-bound phases: overlap gains nothing; expect 0 or a
+    no-better-than-serial outcome."""
+    a = Phase("a", hbm_bytes=5e9)
+    b = Phase("b", hbm_bytes=5e9)
+    nb, t = best_bucket_count(a, b)
+    assert t >= (a.t_solo() + b.t_solo()) * 0.99

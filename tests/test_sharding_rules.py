@@ -1,0 +1,89 @@
+"""Unit tests for the sharding rules (runtime/sharding.py) on a tiny
+host mesh — spec selection, divisibility fallback, stacked-layer handling."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.models import model_for
+from repro.runtime import sharding as sh
+
+import numpy as np
+
+
+def _mesh():
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def _specs(arch, fsdp=None):
+    cfg = configs.get_reduced(arch)
+    model = model_for(cfg)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    shardings = sh.param_shardings(cfg, _mesh(), params_shape, fsdp=fsdp)
+    return cfg, params_shape, shardings
+
+
+def test_dense_tp_specs():
+    cfg, shapes, shardings = _specs("qwen2-0.5b", fsdp=False)
+    flat = {sh._path_str(p): s for p, s in
+            jax.tree_util.tree_flatten_with_path(shardings)[0]}
+    # Stacked layers: leading None then column/row TP.
+    assert flat["layers/attn/wq"].spec == P(None, None, "model")
+    assert flat["layers/attn/wo"].spec == P(None, "model", None)
+    assert flat["layers/mlp/wi"].spec == P(None, None, "model")
+    assert flat["layers/mlp/wo"].spec == P(None, "model", None)
+    assert flat["embed"].spec == P("model", None)
+
+
+def test_moe_expert_sharding():
+    cfg, shapes, shardings = _specs("olmoe-1b-7b")
+    flat = {sh._path_str(p): s for p, s in
+            jax.tree_util.tree_flatten_with_path(shardings)[0]}
+    assert flat["layers/moe/wi"].spec == P(None, "model", None, None)
+    # Replicated (stacked rule prepends a None for the layer axis).
+    assert flat["layers/moe/router"].spec in (P(), P(None))
+
+
+def test_divisibility_fallback():
+    """A dim not divisible by the mesh axis must drop its sharding."""
+    mesh_devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(mesh_devs, ("data", "model"))
+    spec = sh._validate(P(None, "model"), (8, 7), mesh)
+    assert spec == P(None, "model")  # model axis size 1 divides everything
+
+    # Simulate a 16-wide axis by checking the logic directly:
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    spec = sh._validate(P(None, "model"), (8, 7), FakeMesh())
+    assert spec == P(None, None)
+    spec = sh._validate(P(("data", "model"), None), (8, 7), FakeMesh())
+    assert spec in (P(None, None), P(None))
+
+
+def test_batch_shardings():
+    mesh = _mesh()
+    specs = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    out = sh.batch_shardings(mesh, specs)
+    assert out["tokens"].spec[0] in ("data", ("data",))
+
+
+def test_cache_shardings_kv_vs_seq():
+    cfg = configs.get_reduced("qwen2-0.5b")
+    model = model_for(cfg)
+    cache_shape = jax.eval_shape(lambda: model.init_cache(4, 32))
+    out = sh.cache_shardings(cfg, _mesh(), cache_shape)
+    # (L, B, S, KV, hd): kv_heads=2 divisible by model axis (size 1 here).
+    assert out["k"].spec == P(None, ("data",), None, "model", None)
+
+
+def test_all_archs_shardings_build():
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get_reduced(arch)
+        model = model_for(cfg)
+        params_shape = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+        shardings = sh.param_shardings(cfg, _mesh(), params_shape)
+        assert jax.tree.leaves(shardings), arch

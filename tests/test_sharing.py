@@ -1,0 +1,161 @@
+"""Unit + property tests for the bandwidth-sharing model (paper Eqs. 4-5)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import sharing, table2
+from repro.core.sharing import Group, overlapped_saturated_bw, request_shares
+
+
+def test_eq4_example():
+    """Hand-computed Eq. 4: thread-weighted mean."""
+    g = [Group(n=6, f=0.2, bs=100.0), Group(n=4, f=0.4, bs=50.0)]
+    assert overlapped_saturated_bw(g) == pytest.approx((6 * 100 + 4 * 50) / 10)
+
+
+def test_eq5_fig5_example():
+    """The paper's Fig. 5 setup: 6 vs 4 cores, f_II >> f_I."""
+    g = [Group(n=6, f=0.1, bs=100.0), Group(n=4, f=0.8, bs=100.0)]
+    a = request_shares(g)
+    assert a[0] == pytest.approx(0.6 * 0.1 / (0.6 * 0.1 + 0.4 * 0.8) * 10 / 10)
+    assert a[0] == pytest.approx(0.6 / (0.6 + 3.2))
+    assert sum(a) == pytest.approx(1.0)
+    # Kernel II queues more requests per core -> more bandwidth per core.
+    pred = sharing.predict(g, saturated=True)
+    assert pred.bw_per_core[1] > pred.bw_per_core[0]
+
+
+def test_homogeneous_split_is_linear():
+    """f_I == f_II: share is determined by thread counts alone."""
+    g = [Group(n=3, f=0.25, bs=80.0), Group(n=7, f=0.25, bs=80.0)]
+    pred = sharing.predict(g, saturated=True)
+    assert pred.alphas[0] == pytest.approx(0.3)
+    assert pred.bw_per_core[0] == pytest.approx(pred.bw_per_core[1])
+
+
+def test_global_f_factor_cancels():
+    """Paper Sect. V: 'a global reduction factor in f cancels out in the
+    model (5)' — shares are invariant under f -> c*f."""
+    g1 = [Group(n=5, f=0.30, bs=60.0), Group(n=5, f=0.20, bs=70.0)]
+    g2 = [Group(n=5, f=0.15, bs=60.0), Group(n=5, f=0.10, bs=70.0)]
+    p1 = sharing.predict(g1, saturated=True)
+    p2 = sharing.predict(g2, saturated=True)
+    assert p1.alphas == pytest.approx(p2.alphas)
+    assert p1.bw_group == pytest.approx(p2.bw_group)
+
+
+def test_dcopy_gains_over_ddot2():
+    """Fig. 6 discussion: DCOPY (higher f) gains share when paired with
+    DDOT2, and overall bandwidth drops as DCOPY threads increase (its b_s is
+    lower than read-only DDOT2's)."""
+    dcopy, ddot2 = table2.kernel("DCOPY"), table2.kernel("DDOT2")
+    for arch, n_dom in [("BDW-1", 10), ("BDW-2", 18), ("CLX", 20), ("ROME", 8)]:
+        prev_total = None
+        for n_a in range(1, n_dom):
+            pred = sharing.pair(dcopy, ddot2, arch, n_a, n_dom - n_a)
+            share_percore_a = pred.bw_per_core[0]
+            share_percore_b = pred.bw_per_core[1]
+            assert share_percore_a > share_percore_b  # f_DCOPY > f_DDOT2
+            if prev_total is not None:
+                assert pred.total_bw <= prev_total + 1e-9
+            prev_total = pred.total_bw
+
+
+def test_fig9_gain_sign_follows_f_ratio():
+    """Fig. 9: gain or loss vs. self-pairing follows the f ratio; the b_s
+    envelope (Eq. 4) modulates the magnitude."""
+    for arch in table2.ARCHS:
+        for ka in table2.FIG9_KERNELS:
+            for kb in table2.FIG9_KERNELS:
+                a, b = table2.kernel(ka), table2.kernel(kb)
+                gain = sharing.gain_vs_self(a, b, arch, 5)
+                f_ratio = a.f[arch] / b.f[arch]
+                bs_ratio = b.bs[arch] / a.bs[arch]
+                if f_ratio > 1.05 and bs_ratio > 0.95:
+                    assert gain > 1.0, (arch, ka, kb)
+                if f_ratio < 0.95 and bs_ratio < 1.05:
+                    assert gain < 1.0, (arch, ka, kb)
+
+
+def test_unsaturated_single_core():
+    """One core alone draws its single-thread bandwidth f*b_s."""
+    spec = table2.kernel("STREAM")
+    g = [Group.of(spec, "CLX", 1)]
+    pred = sharing.predict(g)
+    assert pred.bw_group[0] == pytest.approx(
+        spec.f["CLX"] * spec.bs["CLX"], rel=1e-6)
+
+
+def test_queue_utilization_knee():
+    spec = table2.kernel("DDOT2")
+    f, bs = spec.f["CLX"], spec.bs["CLX"]
+    n_knee = int(1 / f) + 1
+    pred = sharing.predict([Group.of(spec, "CLX", n_knee + 4)],
+                           utilization="queue")
+    assert pred.total_bw == pytest.approx(bs)
+
+
+def test_runtime_prediction():
+    g = [Group(n=2, f=0.3, bs=100.0), Group(n=2, f=0.3, bs=100.0)]
+    t = sharing.runtime(g, [1e9, 2e9])
+    assert t[1] == pytest.approx(2 * t[0])
+
+
+# ---------------------------------------------------------------------------
+# Property tests
+# ---------------------------------------------------------------------------
+
+groups_strategy = st.lists(
+    st.builds(Group,
+              n=st.integers(min_value=0, max_value=64),
+              f=st.floats(min_value=0.01, max_value=1.0),
+              bs=st.floats(min_value=1.0, max_value=1000.0)),
+    min_size=1, max_size=6,
+).filter(lambda gs: sum(g.n for g in gs) > 0)
+
+
+@given(groups_strategy)
+@settings(max_examples=200, deadline=None)
+def test_shares_sum_to_one(gs):
+    a = request_shares(gs)
+    if any(g.n * g.f > 0 for g in gs):
+        assert sum(a) == pytest.approx(1.0)
+
+
+@given(groups_strategy)
+@settings(max_examples=200, deadline=None)
+def test_total_bw_within_envelope(gs):
+    pred = sharing.predict(gs)
+    envelope = max(g.bs for g in gs)
+    assert pred.total_bw <= envelope * (1 + 1e-9)
+    assert all(b >= 0 for b in pred.bw_group)
+
+
+@given(groups_strategy)
+@settings(max_examples=200, deadline=None)
+def test_eq4_envelope_bounds(gs):
+    b = overlapped_saturated_bw(gs)
+    nonzero = [g for g in gs if g.n]
+    assert min(g.bs for g in nonzero) - 1e-9 <= b <= max(
+        g.bs for g in nonzero) + 1e-9
+
+
+@given(groups_strategy, st.floats(min_value=0.1, max_value=0.99))
+@settings(max_examples=200, deadline=None)
+def test_alpha_scale_invariance(gs, c):
+    p1 = request_shares(gs)
+    p2 = request_shares([Group(g.n, g.f * c, g.bs) for g in gs])
+    assert p1 == pytest.approx(p2, rel=1e-9)
+
+
+@given(st.integers(min_value=1, max_value=32),
+       st.integers(min_value=1, max_value=32),
+       st.floats(min_value=0.05, max_value=1.0),
+       st.floats(min_value=0.05, max_value=1.0))
+@settings(max_examples=200, deadline=None)
+def test_higher_f_gets_higher_percore_share(na, nb, fa, fb):
+    g = [Group(n=na, f=fa, bs=100.0), Group(n=nb, f=fb, bs=100.0)]
+    pred = sharing.predict(g, saturated=True)
+    if fa > fb:
+        assert pred.bw_per_core[0] >= pred.bw_per_core[1]

@@ -1,0 +1,104 @@
+"""Validate the encoded Table II against the paper's own numbers."""
+
+import math
+
+import pytest
+
+from repro.core import table2
+from repro.core.table2 import ARCHS, PAPER_CODE_BALANCE, TABLE2
+
+
+def test_suite_is_complete():
+    # 15 kernels: 4 read-only BLAS1, 7 read-write streaming, 4 stencil cases.
+    assert len(TABLE2) == 15
+    assert set(PAPER_CODE_BALANCE) <= set(TABLE2)
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_CODE_BALANCE))
+def test_code_balance_matches_paper(name):
+    spec = TABLE2[name]
+    expected = PAPER_CODE_BALANCE[name]
+    if name.startswith("Jacobi"):
+        # Stencil balances are per lattice-site update (flop counts include
+        # the full residual form for v2) — allow the coarse flop accounting
+        # 20% slack.
+        assert spec.code_balance == pytest.approx(expected, rel=0.20)
+    else:
+        assert spec.code_balance == pytest.approx(expected, rel=1e-2)
+
+
+def test_dcopy_has_no_flops():
+    assert TABLE2["DCOPY"].flops_per_iter == 0
+    assert math.isinf(TABLE2["DCOPY"].code_balance)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_read_only_kernels_saturate_higher(arch):
+    """Paper Sect. III: read-only kernels achieve 5–15% higher b_s 'as a
+    general rule' (DDOT3 on CLX is the paper's own exception at 100.9)."""
+    ro = [s.bs[arch] for s in TABLE2.values() if s.read_only]
+    rw = [s.bs[arch] for s in TABLE2.values() if not s.read_only]
+    mean = lambda xs: sum(xs) / len(xs)
+    assert mean(ro) > mean(rw) * 1.02
+    assert max(ro) > max(rw)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_f_in_unit_interval(arch):
+    for spec in TABLE2.values():
+        assert 0.0 < spec.f[arch] <= 1.0
+
+
+def test_rome_f_close_to_one():
+    """Paper: on Rome 'f is often close to one' for streaming kernels."""
+    for spec in TABLE2.values():
+        if not spec.name.startswith("Jacobi"):
+            assert spec.f["ROME"] > 0.7
+
+
+def test_intel_f_well_below_one():
+    """Non-overlapping hierarchies keep f small even for pure streaming."""
+    for spec in TABLE2.values():
+        for arch in ("BDW-1", "BDW-2", "CLX"):
+            assert spec.f[arch] < 0.45
+
+
+def test_clx_has_smallest_spread():
+    """Paper Sect. V: CLX shows ~10% b_s spread vs ~20% on BDW-1, and less
+    spread in f (2.4 vs 2.7) — the reason its sharing variations are mild."""
+    def spread(arch, field):
+        vals = [getattr(s, field)[arch] for s in TABLE2.values()]
+        return max(vals) / min(vals)
+
+    assert spread("CLX", "bs") < spread("BDW-1", "bs")
+    assert spread("BDW-1", "bs") == pytest.approx(1.2, abs=0.05)
+    assert spread("CLX", "bs") == pytest.approx(1.1, abs=0.05)
+    assert spread("CLX", "f") < spread("BDW-1", "f")
+    assert spread("BDW-1", "f") == pytest.approx(2.7, abs=0.2)
+    assert spread("CLX", "f") == pytest.approx(2.4, abs=0.2)
+
+
+def test_daxpy_dscal_f_relation():
+    """Paper Fig. 9 discussion: f_DAXPY > f_DSCAL on Rome, reversed on Intel."""
+    daxpy, dscal = TABLE2["DAXPY"], TABLE2["DSCAL"]
+    assert daxpy.f["ROME"] > dscal.f["ROME"]
+    for arch in ("BDW-1", "BDW-2", "CLX"):
+        assert daxpy.f[arch] < dscal.f[arch]
+
+
+def test_paper_quoted_f_values():
+    """Sect. V quotes f_DAXPY = 0.315 and f_DDOT2 = 0.252 (BDW-1 column)."""
+    assert TABLE2["DAXPY"].f["BDW-1"] == pytest.approx(0.315, abs=1e-3)
+    assert TABLE2["DDOT2"].f["BDW-1"] == pytest.approx(0.252, abs=1e-3)
+
+
+def test_layer_condition_reduces_f():
+    """LC satisfied at L2 -> fewer L3 streams -> higher f than LC broken."""
+    for arch in ARCHS:
+        assert TABLE2["JacobiL2-v1"].f[arch] > TABLE2["JacobiL3-v1"].f[arch]
+        assert TABLE2["JacobiL2-v2"].f[arch] > TABLE2["JacobiL3-v2"].f[arch]
+
+
+def test_kernel_lookup_error():
+    with pytest.raises(KeyError):
+        table2.kernel("NOPE")
