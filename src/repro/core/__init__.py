@@ -5,21 +5,31 @@ Public API:
   machine   — Table I machine models + TPU v5e chip model
   table2    — Table II kernel suite (f, b_s per architecture)
   ecm       — ECM single-core model (Eqs. 1–3) + multicore scaling
-  sharing   — bandwidth-sharing model (Eqs. 4–5), N-group generalized
+  sharing   — bandwidth-sharing model (Eqs. 4–5), N-group generalized,
+              scalar + batched (vmapped) solver paths
+  topology  — contention-domain trees (sockets → ccNUMA domains; TPU pods
+              → chips) and placement of groups onto domains
   memsim    — microscopic queue-level simulator (validation instrument)
   desync    — rank-level discrete-event desynchronization simulator
   overlap   — overlap-aware TPU step model (compute/collective HBM sharing)
   hlo       — collective-traffic parsing + roofline terms from compiled HLO
 """
 
-from . import desync, ecm, hlo, machine, memsim, overlap, sharing, table2
+from . import (desync, ecm, hlo, machine, memsim, overlap, sharing, table2,
+               topology)
 from .machine import BDW1, BDW2, CLX, ROME, TPU_V5E, MachineModel, TpuModel
-from .sharing import Group, SharePrediction, pair, predict
+from .sharing import (BatchSharePrediction, Group, SharePrediction, pair,
+                      predict, predict_batch, solve_batch)
 from .table2 import ARCHS, FIG9_KERNELS, TABLE2, KernelSpec, kernel
+from .topology import (ContentionDomain, Placed, Topology, TopologyNode,
+                       TopologyPrediction, predict_placed)
 
 __all__ = [
     "desync", "ecm", "hlo", "machine", "memsim", "overlap", "sharing",
-    "table2", "BDW1", "BDW2", "CLX", "ROME", "TPU_V5E", "MachineModel",
-    "TpuModel", "Group", "SharePrediction", "pair", "predict", "ARCHS",
-    "FIG9_KERNELS", "TABLE2", "KernelSpec", "kernel",
+    "table2", "topology", "BDW1", "BDW2", "CLX", "ROME", "TPU_V5E",
+    "MachineModel", "TpuModel", "Group", "SharePrediction",
+    "BatchSharePrediction", "pair", "predict", "predict_batch",
+    "solve_batch", "ARCHS", "FIG9_KERNELS", "TABLE2", "KernelSpec",
+    "kernel", "ContentionDomain", "Placed", "Topology", "TopologyNode",
+    "TopologyPrediction", "predict_placed",
 ]

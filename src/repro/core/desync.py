@@ -10,6 +10,11 @@ in-flight kernels across ranks forms groups; the sharing model (Eqs. 4–5)
 dictates each rank's bandwidth and hence its progress rate.  Desync or resync
 emerges from the dynamics — nothing about skew is put in by hand.
 
+Ranks may be pinned to different contention domains of a
+:class:`repro.core.topology.Topology` (dual-socket nodes, NPS4 Rome, TPU
+pods): kernels only contend with kernels on the *same* domain, and all
+populated domains are solved in one batched call per event step.
+
 The same engine doubles as the TPU straggler model: ranks = data-parallel
 workers, kernels = step phases, allreduce = the gradient reduction.
 """
@@ -21,8 +26,9 @@ import math
 from collections import defaultdict
 from typing import Sequence
 
-from .sharing import Group, predict
+from .sharing import Group, predict_batch
 from .table2 import TABLE2, KernelSpec
+from .topology import Topology
 
 EPS = 1e-15
 
@@ -101,14 +107,34 @@ class _RankState:
 
 
 class DesyncSimulator:
-    """Event-driven co-execution of per-rank programs on one domain."""
+    """Event-driven co-execution of per-rank programs on one or more
+    contention domains.
+
+    ``topology``/``placement`` pin each rank to a domain (``placement[r]``
+    is a domain name of ``topology``); the default is the paper's setting —
+    every rank on a single shared domain.
+    """
 
     def __init__(self, programs: Sequence[Sequence[Item]], arch: str,
-                 specs: dict[str, KernelSpec] | None = None):
+                 specs: dict[str, KernelSpec] | None = None, *,
+                 topology: Topology | None = None,
+                 placement: Sequence[str] | None = None):
         self.programs = programs
         self.arch = arch
         self.specs = dict(TABLE2 if specs is None else specs)
         self.records: list[Record] = []
+        if (topology is None) != (placement is None):
+            raise ValueError("topology and placement must be given together")
+        if topology is not None:
+            if len(placement) != len(programs):
+                raise ValueError(
+                    f"placement names {len(placement)} domains for "
+                    f"{len(programs)} ranks")
+            for dom in placement:
+                topology.domain(dom)  # raises KeyError on unknown names
+        self.topology = topology
+        self.placement = (tuple(placement) if placement is not None
+                          else ("domain0",) * len(programs))
 
     def _group_of(self, kernel: str, n: int) -> Group:
         spec = self.specs[kernel]
@@ -155,22 +181,32 @@ class DesyncSimulator:
             if resolved:
                 continue  # re-evaluate doneness/groups after retirements
 
-            # -- group working ranks by kernel
-            working: dict[str, list[int]] = defaultdict(list)
+            # -- group working ranks by (domain, kernel)
+            working: dict[tuple[str, str], list[int]] = defaultdict(list)
             for r, st in enumerate(ranks):
                 it = st.current()
                 if isinstance(it, Work) and not st.blocked:
-                    working[it.kernel].append(r)
+                    working[(self.placement[r], it.kernel)].append(r)
 
-            # -- progress rates from the sharing model
+            # -- progress rates: every populated domain is an independent
+            # Eq. 4–5 instance; solve them all in one batched call.
             rates: dict[int, float] = {}
             if working:
-                names = sorted(working)
-                groups = [self._group_of(k, len(working[k])) for k in names]
-                pred = predict(groups)
-                for k, bw_core in zip(names, pred.bw_per_core):
-                    for r in working[k]:
-                        rates[r] = bw_core * 1e9  # bytes/s
+                domains = sorted({dom for dom, _ in working})
+                per_dom = [sorted(k for d, k in working if d == dom)
+                           for dom in domains]
+                scenarios = [
+                    [self._group_of(k, len(working[(dom, k)]))
+                     for k in kernels]
+                    for dom, kernels in zip(domains, per_dom)]
+                # numpy backend: the per-event batches are tiny, so jit
+                # dispatch overhead would dominate any vmap win here.
+                batch = predict_batch(scenarios, backend="numpy")
+                per_core = batch.bw_per_core
+                for row, (dom, kernels) in enumerate(zip(domains, per_dom)):
+                    for j, k in enumerate(kernels):
+                        for r in working[(dom, k)]:
+                            rates[r] = per_core[row, j] * 1e9  # bytes/s
 
             # -- find the next event time
             dt = math.inf

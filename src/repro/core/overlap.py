@@ -19,7 +19,8 @@ import dataclasses
 from typing import Sequence
 
 from .machine import TPU_V5E, TpuModel
-from .sharing import Group, predict
+from .sharing import Group
+from .topology import ContentionDomain, predict_single_domain
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,19 +66,28 @@ class OverlapPrediction:
         return self.t_overlap < self.t_serial * 0.995
 
 
+def _chip_domain(tpu: TpuModel) -> ContentionDomain:
+    """One chip's HBM interface as a contention domain (the TPU leaf of
+    core/topology.py trees)."""
+    return ContentionDomain(f"{tpu.name}/hbm", n_cores=8, tpu=tpu)
+
+
 def _hbm_shared_rates(active: Sequence[Phase], tpu: TpuModel
                       ) -> list[float]:
     """Per-phase progress rate (fraction of solo speed) while co-scheduled.
 
-    HBM is arbitrated by the paper's model: each phase is a Group with
-    n=1 (one DMA/load stream agent), f from Eq. 2, and b_s = HBM bandwidth
-    (the envelope does not vary by stream kind on TPU: Eq. 4 degenerates to
-    b_s).  A phase's non-HBM legs (MXU time, ICI time) are unaffected; its
-    HBM leg stretches by 1/share.
+    HBM is arbitrated by the paper's model on the chip's contention domain:
+    each phase is a Group with n=1 (one DMA/load stream agent), f from
+    Eq. 2, and b_s = HBM bandwidth (the envelope does not vary by stream
+    kind on TPU: Eq. 4 degenerates to b_s).  A phase's non-HBM legs (MXU
+    time, ICI time) are unaffected; its HBM leg stretches by 1/share.
     """
     groups = [Group(n=1, f=p.request_fraction(tpu), bs=tpu.hbm_bw_gbs,
                     name=p.name) for p in active]
-    pred = predict(groups)
+    # numpy backend: overlap_pair calls this every event step with 2-3
+    # groups, where jit dispatch overhead would dominate the solve.
+    pred = predict_single_domain(groups, _chip_domain(tpu),
+                                 backend="numpy")
     rates = []
     for p, bw in zip(active, pred.bw_group):
         t_c, t_m, t_i = p.times(tpu)

@@ -10,15 +10,41 @@ the request-proportional arbitration (Eq. 5) and the thread-weighted
 saturation envelope (Eq. 4) are both linear in the groups.  We use the
 N-group form throughout (the desync simulator routinely has >2 distinct
 kernels in flight).
+
+Two execution paths solve the same equations:
+
+* the **scalar path** (:func:`predict`) — the original single-domain API,
+  now a thin wrapper over the array core; returns plain-float
+  :class:`SharePrediction` objects and stays the reference implementation;
+* the **batched path** (:func:`solve_batch` / :func:`predict_batch`) —
+  solves B independent scenarios of up to G groups in one shot, either with
+  vectorized numpy or with a ``jax.vmap``-ped, jitted kernel.  Full-domain
+  sweeps (benchmarks/fig6_full_domain.py, fig9_pairings.py) and topology
+  solves (core/topology.py) go through this path.
+
+Scenarios are rectangular arrays ``n, f, bs`` of shape ``(B, G)``; ragged
+group lists are padded with ``n = 0`` entries, which are exactly neutral in
+Eqs. 4–5 (they contribute nothing to any sum).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Sequence
 
-from .ecm import scaling_curve
+import numpy as np
+
 from .table2 import KernelSpec
+
+try:  # The batched JAX path is optional: numpy covers hermetic containers.
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    HAVE_JAX = True
+except ModuleNotFoundError:  # pragma: no cover - exercised only without jax
+    HAVE_JAX = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,26 +117,25 @@ def predict(groups: Sequence[Group], *, saturated: bool | None = None,
         Hard knee, matches the idealized queue instrument (core/memsim.py).
       * a float — externally calibrated utilization.
     ``saturated=True`` forces U = 1.
+
+    This is now a thin wrapper over the vectorized array core
+    (:func:`_solve_arrays_np`) with batch size 1; :func:`solve_batch` runs
+    the same math over many scenarios at once.
     """
     groups = tuple(groups)
-    b = overlapped_saturated_bw(groups)
-    alphas = request_shares(groups)
-    n_tot = sum(g.n for g in groups)
-
-    util = 1.0
-    if saturated is not True and n_tot > 0:
-        f_mean = sum(g.n * g.f for g in groups) / n_tot
-        if isinstance(utilization, (int, float)):
-            util = float(utilization)
-        elif utilization == "queue":
-            util = min(1.0, f_mean * n_tot)
-        elif f_mean > 0:
-            util = scaling_curve(f_mean, t_mem=f_mean, t_ecm=1.0,
-                                 n_max=n_tot, p0_factor=p0_factor)[n_tot - 1]
-    bw = tuple(a * util * b for a in alphas)
-
-    return SharePrediction(groups=groups, b_overlap=b, alphas=alphas,
-                           bw_group=bw)
+    if not groups:
+        return SharePrediction(groups=(), b_overlap=0.0, alphas=(),
+                               bw_group=())
+    n = np.array([[g.n for g in groups]], dtype=np.float64)
+    f = np.array([[g.f for g in groups]], dtype=np.float64)
+    bs = np.array([[g.bs for g in groups]], dtype=np.float64)
+    b, alphas, util, bw = _solve_arrays_np(
+        n, f, bs, utilization=utilization, p0_factor=p0_factor,
+        saturated=saturated)
+    return SharePrediction(
+        groups=groups, b_overlap=float(b[0]),
+        alphas=tuple(float(a) for a in alphas[0]),
+        bw_group=tuple(float(x) for x in bw[0]))
 
 
 def pair(kernel_a: KernelSpec, kernel_b: KernelSpec, arch: str,
@@ -138,3 +163,222 @@ def runtime(groups: Sequence[Group], work_bytes: Sequence[float]
         wb / (bw * 1e9) if bw > 0 else float("inf")
         for wb, bw in zip(work_bytes, pred.bw_group)
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched solver: B scenarios × G groups in one call.
+# ---------------------------------------------------------------------------
+
+_TINY = 1e-300  # division guard far below any physical n·f product
+
+
+def _solve_arrays_np(n: np.ndarray, f: np.ndarray, bs: np.ndarray, *,
+                     utilization: str | float, p0_factor: float,
+                     saturated: bool | None
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray]:
+    """Vectorized Eqs. 4–5 over ``(B, G)`` arrays.
+
+    Returns ``(b_overlap (B,), alphas (B,G), util (B,), bw_group (B,G))``.
+    Entries with ``n == 0`` are neutral padding.  Reference implementation:
+    the scalar :func:`predict` wraps this with B = 1.
+    """
+    n = np.asarray(n, dtype=np.float64)
+    f = np.asarray(f, dtype=np.float64)
+    bs = np.asarray(bs, dtype=np.float64)
+    n_tot = n.sum(axis=-1)
+    safe_n = np.maximum(n_tot, 1.0)
+
+    # Eq. 4: thread-weighted saturation envelope.
+    b = np.where(n_tot > 0, (n * bs).sum(axis=-1) / safe_n, 0.0)
+
+    # Eq. 5: request-proportional arbitration.
+    w = n * f
+    w_sum = w.sum(axis=-1)
+    alphas = np.where(w_sum[..., None] > 0,
+                      w / np.maximum(w_sum, _TINY)[..., None], 0.0)
+
+    # Interface utilization at the mean request fraction (sub-saturation).
+    f_mean = np.where(n_tot > 0, w_sum / safe_n, 0.0)
+    active = n_tot > 0
+    if saturated is True:
+        util = np.ones_like(b)
+    elif isinstance(utilization, (int, float)):
+        util = np.where(active, float(utilization), 1.0)
+    elif utilization == "queue":
+        util = np.where(active, np.minimum(1.0, f_mean * n_tot), 1.0)
+    elif utilization == "recursion":
+        # Latency-penalty recursion (ecm.scaling_curve) with t_ecm = 1,
+        # t_mem = f_mean, evaluated at each scenario's own n_tot via masking.
+        p0 = p0_factor * f_mean
+        u = f_mean.copy()
+        n_max = int(n_tot.max()) if n_tot.size else 0
+        for i in range(2, n_max + 1):
+            t_i = 1.0 + p0 * u * (i - 1)
+            u = np.where(i <= n_tot, np.minimum(1.0, i * f_mean / t_i), u)
+        util = np.where(active & (f_mean > 0), u, 1.0)
+    else:
+        raise ValueError(f"unknown utilization mode {utilization!r}")
+
+    bw = alphas * (util * b)[..., None]
+    return b, alphas, util, bw
+
+
+if HAVE_JAX:
+
+    def _solve_single_jax(n, f, bs, p0_aux, n_max, *, mode: str):
+        """One scenario (shape ``(G,)``); vmapped over the batch axis.
+
+        ``p0_aux`` carries ``p0_factor`` (recursion) or the fixed
+        utilization (mode "fixed").  ``n_max`` is the loop bound, shared
+        across the batch so the vmapped ``fori_loop`` stays uniform.
+        """
+        n_tot = n.sum()
+        safe_n = jnp.maximum(n_tot, 1.0)
+        b = jnp.where(n_tot > 0, (n * bs).sum() / safe_n, 0.0)
+        w = n * f
+        w_sum = w.sum()
+        alphas = jnp.where(w_sum > 0, w / jnp.maximum(w_sum, _TINY), 0.0)
+        f_mean = jnp.where(n_tot > 0, w_sum / safe_n, 0.0)
+        active = n_tot > 0
+        if mode == "saturated":
+            util = jnp.ones_like(b)
+        elif mode == "fixed":
+            util = jnp.where(active, p0_aux, 1.0)
+        elif mode == "queue":
+            util = jnp.where(active, jnp.minimum(1.0, f_mean * n_tot), 1.0)
+        else:  # recursion
+            p0 = p0_aux * f_mean
+
+            def body(i, u):
+                fi = i.astype(f_mean.dtype)
+                t_i = 1.0 + p0 * u * (fi - 1.0)
+                return jnp.where(fi <= n_tot,
+                                 jnp.minimum(1.0, fi * f_mean / t_i), u)
+
+            u = lax.fori_loop(2, n_max + 1, body, f_mean)
+            util = jnp.where(active & (f_mean > 0), u, 1.0)
+        bw = alphas * util * b
+        return b, alphas, util, bw
+
+    @functools.lru_cache(maxsize=None)
+    def _jax_batch_solver(mode: str):
+        """Jitted vmap of the single-scenario solver, cached per mode."""
+        vmapped = jax.vmap(
+            functools.partial(_solve_single_jax, mode=mode),
+            in_axes=(0, 0, 0, None, None))
+        return jax.jit(vmapped, static_argnums=(4,))
+
+    def _solve_arrays_jax(n, f, bs, *, utilization, p0_factor, saturated):
+        """JAX twin of :func:`_solve_arrays_np` (float64 via local x64)."""
+        if saturated is True:
+            mode, aux = "saturated", 0.0
+        elif isinstance(utilization, (int, float)):
+            mode, aux = "fixed", float(utilization)
+        elif utilization in ("queue", "recursion"):
+            mode, aux = utilization, p0_factor
+        else:
+            raise ValueError(f"unknown utilization mode {utilization!r}")
+        n = np.asarray(n, dtype=np.float64)
+        n_max = int(n.sum(axis=-1).max()) if n.size else 0
+        solver = _jax_batch_solver(mode)
+        with jax.experimental.enable_x64():
+            out = solver(jnp.asarray(n, jnp.float64),
+                         jnp.asarray(f, jnp.float64),
+                         jnp.asarray(bs, jnp.float64),
+                         jnp.float64(aux), n_max)
+        return tuple(np.asarray(x) for x in out)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSharePrediction:
+    """Solution of B independent sharing scenarios (arrays, batch-first)."""
+
+    n: np.ndarray          # (B, G) thread counts (float, 0 = padding)
+    f: np.ndarray          # (B, G) request fractions
+    bs: np.ndarray         # (B, G) saturated bandwidths [GB/s]
+    b_overlap: np.ndarray  # (B,)   Eq. 4 envelopes [GB/s]
+    alphas: np.ndarray     # (B, G) Eq. 5 request shares
+    util: np.ndarray       # (B,)   interface utilization factors
+    bw_group: np.ndarray   # (B, G) attained bandwidth per group [GB/s]
+
+    @property
+    def bw_per_core(self) -> np.ndarray:
+        return np.divide(self.bw_group, self.n,
+                         out=np.zeros_like(self.bw_group),
+                         where=self.n > 0)
+
+    @property
+    def total_bw(self) -> np.ndarray:
+        return self.bw_group.sum(axis=-1)
+
+    def __len__(self) -> int:
+        return self.bw_group.shape[0]
+
+    def scenario(self, i: int) -> "SharePrediction":
+        """Materialize scenario ``i`` as a scalar-API prediction (padding
+        groups dropped)."""
+        keep = [j for j in range(self.n.shape[1]) if self.n[i, j] > 0]
+        groups = tuple(Group(n=int(self.n[i, j]), f=float(self.f[i, j]),
+                             bs=float(self.bs[i, j]))
+                       for j in keep)
+        return SharePrediction(
+            groups=groups, b_overlap=float(self.b_overlap[i]),
+            alphas=tuple(float(self.alphas[i, j]) for j in keep),
+            bw_group=tuple(float(self.bw_group[i, j]) for j in keep))
+
+
+def solve_batch(n, f, bs, *, utilization: str | float = "recursion",
+                p0_factor: float = 0.5, saturated: bool | None = None,
+                backend: str = "auto") -> BatchSharePrediction:
+    """Solve Eqs. 4–5 for a batch of scenarios.
+
+    ``n``, ``f``, ``bs``: array-likes of shape ``(B, G)`` (a single ``(G,)``
+    scenario is promoted to B = 1).  Groups with ``n = 0`` act as padding.
+    ``backend``: ``"jax"`` (vmapped + jitted), ``"numpy"``, or ``"auto"``
+    (jax when importable, else numpy).  Both backends compute in float64
+    and agree with the scalar :func:`predict` to ~1e-12 relative.
+    """
+    n = np.atleast_2d(np.asarray(n, dtype=np.float64))
+    f = np.atleast_2d(np.asarray(f, dtype=np.float64))
+    bs = np.atleast_2d(np.asarray(bs, dtype=np.float64))
+    if not (n.shape == f.shape == bs.shape):
+        raise ValueError(
+            f"shape mismatch: n{n.shape} f{f.shape} bs{bs.shape}")
+    if backend == "auto":
+        backend = "jax" if HAVE_JAX else "numpy"
+    if backend == "jax":
+        if not HAVE_JAX:
+            raise RuntimeError("backend='jax' requested but jax is not "
+                               "importable")
+        b, alphas, util, bw = _solve_arrays_jax(
+            n, f, bs, utilization=utilization, p0_factor=p0_factor,
+            saturated=saturated)
+    elif backend == "numpy":
+        b, alphas, util, bw = _solve_arrays_np(
+            n, f, bs, utilization=utilization, p0_factor=p0_factor,
+            saturated=saturated)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return BatchSharePrediction(n=n, f=f, bs=bs, b_overlap=b, alphas=alphas,
+                                util=util, bw_group=bw)
+
+
+def groups_to_arrays(scenarios: Sequence[Sequence[Group]]
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack ragged per-scenario group lists into padded ``(B, G)`` arrays."""
+    g_max = max((len(s) for s in scenarios), default=0)
+    shape = (len(scenarios), max(g_max, 1))
+    n = np.zeros(shape)
+    f = np.zeros(shape)
+    bs = np.zeros(shape)
+    for i, sc in enumerate(scenarios):
+        for j, g in enumerate(sc):
+            n[i, j], f[i, j], bs[i, j] = g.n, g.f, g.bs
+    return n, f, bs
+
+
+def predict_batch(scenarios: Sequence[Sequence[Group]], **kwargs
+                  ) -> BatchSharePrediction:
+    """Batched :func:`predict` over a list of group lists."""
+    return solve_batch(*groups_to_arrays(scenarios), **kwargs)

@@ -1,0 +1,315 @@
+"""Contention-domain topology: machines as trees of memory domains.
+
+The paper's sharing model (core/sharing.py, Eqs. 4–5) arbitrates bandwidth
+on *one* memory contention domain.  Real machines have several: a
+dual-socket Cascade Lake node has two, a dual-socket Rome in NPS4 mode has
+eight ccNUMA quadrants, a TPU v5e pod slice has one HBM interface per chip.
+Kerncraft-style automated analysis (Hammer et al., arXiv:1509.03778) and the
+cache-topology study behind LIKWID (Treibig et al., arXiv:0910.4865) both
+show that getting topology wrong is where single-domain models break down.
+
+This module describes a machine as a tree — interior :class:`TopologyNode`
+levels (node, socket, package) over leaf :class:`ContentionDomain` objects —
+and solves a *placement* of thread groups onto leaves by running the Eq. 4–5
+arbitration independently per domain (memory controllers of different
+ccNUMA domains do not contend with each other; cross-domain traffic is out
+of scope exactly as in the paper) and aggregating the results.
+
+The per-domain solves go through the batched array solver
+(:func:`repro.core.sharing.solve_batch`), so a topology solve is one
+vectorized call regardless of how many domains are populated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Mapping, Sequence
+
+import numpy as np
+
+from .machine import (BDW1, BDW2, CLX, ROME, TPU_V5E, MachineModel,
+                      TpuModel)
+from .sharing import (BatchSharePrediction, Group, SharePrediction,
+                      groups_to_arrays, solve_batch)
+
+
+# ---------------------------------------------------------------------------
+# Tree description
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ContentionDomain:
+    """Leaf of the tree: one memory interface arbitrated by Eqs. 4–5.
+
+    ``n_cores`` is the domain's capacity — cores on a ccNUMA domain, or
+    concurrent HBM streams (compute loads, DMA prefetch, collective drains)
+    on a TPU chip.  ``machine`` / ``tpu`` carry the hardware description the
+    domain was derived from, when there is one; they are not needed by the
+    solver itself (groups bring their own ``f`` and ``b_s``).
+    """
+
+    name: str
+    n_cores: int
+    machine: MachineModel | None = None
+    tpu: TpuModel | None = None
+
+    @property
+    def saturated_bw_gbs(self) -> float | None:
+        """Read-write saturation envelope of the domain, if known."""
+        if self.machine is not None:
+            return self.machine.saturated_bw_gbs["read_write"]
+        if self.tpu is not None:
+            return self.tpu.hbm_bw_gbs
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyNode:
+    """Interior node: a node, socket, or package grouping domains."""
+
+    name: str
+    children: tuple["TopologyNode | ContentionDomain", ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """A machine as a tree of contention domains."""
+
+    root: TopologyNode
+
+    @property
+    def name(self) -> str:
+        return self.root.name
+
+    @property
+    def domains(self) -> tuple[ContentionDomain, ...]:
+        """All leaves, depth-first (stable order used for batching)."""
+        out: list[ContentionDomain] = []
+
+        def walk(node: TopologyNode | ContentionDomain) -> None:
+            if isinstance(node, ContentionDomain):
+                out.append(node)
+            else:
+                for child in node.children:
+                    walk(child)
+
+        walk(self.root)
+        return tuple(out)
+
+    @property
+    def domain_names(self) -> tuple[str, ...]:
+        return tuple(d.name for d in self.domains)
+
+    def domain(self, name: str) -> ContentionDomain:
+        for d in self.domains:
+            if d.name == name:
+                return d
+        raise KeyError(
+            f"no contention domain {name!r} in topology {self.name!r}; "
+            f"available: {list(self.domain_names)}")
+
+    def __contains__(self, name: str) -> bool:
+        return any(d.name == name for d in self.domains)
+
+    @property
+    def total_cores(self) -> int:
+        return sum(d.n_cores for d in self.domains)
+
+
+# ---------------------------------------------------------------------------
+# Placement + solve
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Placed:
+    """One thread group pinned to one contention domain."""
+
+    group: Group
+    domain: str
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyPrediction:
+    """Per-domain Eq. 4–5 solutions plus cross-domain aggregates.
+
+    ``bw_group`` is ordered like the input placements, so callers can zip
+    it against what they passed in regardless of domain structure.
+    """
+
+    topology: Topology
+    placements: tuple[Placed, ...]
+    by_domain: Mapping[str, SharePrediction]
+    bw_group: tuple[float, ...]
+
+    @property
+    def bw_per_core(self) -> tuple[float, ...]:
+        return tuple(b / p.group.n if p.group.n else 0.0
+                     for b, p in zip(self.bw_group, self.placements))
+
+    @property
+    def total_bw(self) -> float:
+        """Aggregate attained bandwidth across every domain [GB/s]."""
+        return sum(self.bw_group)
+
+    def domain_bw(self, name: str) -> float:
+        """Attained bandwidth on one domain (0 for an idle domain)."""
+        return sum(self.by_domain[name].bw_group)
+
+
+def predict_placed(topology: Topology, placements: Sequence[Placed], *,
+                   strict: bool = True, **solver_kwargs
+                   ) -> TopologyPrediction:
+    """Solve every populated domain's arbitration in one batched call.
+
+    Each leaf domain is an independent Eq. 4–5 instance; an idle domain
+    trivially attains zero bandwidth.  ``strict=True`` rejects placements
+    that name unknown domains or overcommit a domain's cores.
+
+    ``solver_kwargs`` (``utilization``, ``saturated``, ``p0_factor``,
+    ``backend``) are forwarded to :func:`repro.core.sharing.solve_batch`.
+    """
+    placements = tuple(placements)
+    names = topology.domain_names
+    per_domain: dict[str, list[tuple[int, Group]]] = {n: [] for n in names}
+    for idx, p in enumerate(placements):
+        if p.domain not in per_domain:
+            raise KeyError(
+                f"placement {idx} names unknown domain {p.domain!r}; "
+                f"available: {list(names)}")
+        per_domain[p.domain].append((idx, p.group))
+
+    if strict:
+        for name in names:
+            used = sum(g.n for _, g in per_domain[name])
+            cap = topology.domain(name).n_cores
+            if used > cap:
+                raise ValueError(
+                    f"domain {name!r} overcommitted: {used} threads placed "
+                    f"on {cap} cores (pass strict=False to allow)")
+
+    populated = [n for n in names if per_domain[n]]
+    by_domain: dict[str, SharePrediction] = {}
+    bw_flat: list[float] = [0.0] * len(placements)
+
+    if populated:
+        scenarios = [[g for _, g in per_domain[n]] for n in populated]
+        batch = solve_batch(*groups_to_arrays(scenarios), **solver_kwargs)
+        for row, name in enumerate(populated):
+            entries = per_domain[name]
+            groups = tuple(g for _, g in entries)
+            bws = tuple(float(batch.bw_group[row, j])
+                        for j in range(len(entries)))
+            by_domain[name] = SharePrediction(
+                groups=groups,
+                b_overlap=float(batch.b_overlap[row]),
+                alphas=tuple(float(batch.alphas[row, j])
+                             for j in range(len(entries))),
+                bw_group=bws)
+            for (idx, _), bw in zip(entries, bws):
+                bw_flat[idx] = bw
+    for name in names:
+        if name not in by_domain:
+            by_domain[name] = SharePrediction(
+                groups=(), b_overlap=0.0, alphas=(), bw_group=())
+
+    return TopologyPrediction(topology=topology, placements=placements,
+                              by_domain=by_domain, bw_group=tuple(bw_flat))
+
+
+def predict_single_domain(groups: Sequence[Group],
+                          domain: ContentionDomain | None = None,
+                          **solver_kwargs) -> SharePrediction:
+    """Single-domain compatibility wrapper: the paper's original scenario
+    as a one-leaf topology solve.  With ``domain=None`` an unbounded
+    anonymous domain is used (capacity checks off), which reproduces the
+    historical ``sharing.predict`` behavior exactly."""
+    if domain is None:
+        domain = ContentionDomain(
+            "domain0", n_cores=sum(int(g.n) for g in groups))
+    topo = Topology(TopologyNode(domain.name, (domain,)))
+    pred = predict_placed(
+        topo, [Placed(g, domain.name) for g in groups], **solver_kwargs)
+    return pred.by_domain[domain.name]
+
+
+def spread_counts(total: int, n_domains: int) -> tuple[int, ...]:
+    """Block-distribute ``total`` threads over ``n_domains`` domains
+    (first domains get the remainder), the usual OpenMP ``places=sockets``
+    convention."""
+    base, rem = divmod(total, n_domains)
+    return tuple(base + (1 if i < rem else 0) for i in range(n_domains))
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+
+def single_domain(machine: MachineModel) -> Topology:
+    """One ccNUMA domain — the paper's measurement setting (Table I)."""
+    leaf = ContentionDomain(f"{machine.name}/d0",
+                            n_cores=machine.cores_per_domain,
+                            machine=machine)
+    return Topology(TopologyNode(machine.name, (leaf,)))
+
+
+def multi_socket(machine: MachineModel, n_sockets: int = 2, *,
+                 domains_per_socket: int = 1) -> Topology:
+    """A multi-socket node of identical sockets, each split into
+    ``domains_per_socket`` ccNUMA domains (NPS4 Rome: 4)."""
+    sockets = []
+    for s in range(n_sockets):
+        leaves = tuple(
+            ContentionDomain(f"{machine.name}/s{s}/d{d}",
+                             n_cores=machine.cores_per_domain,
+                             machine=machine)
+            for d in range(domains_per_socket))
+        sockets.append(TopologyNode(f"{machine.name}/s{s}", leaves))
+    name = f"{machine.name}-{n_sockets}S"
+    if domains_per_socket > 1:
+        name += f"-NPS{domains_per_socket}"
+    return Topology(TopologyNode(name, tuple(sockets)))
+
+
+def tpu_pod(tpu: TpuModel = TPU_V5E, n_chips: int = 4, *,
+            streams_per_chip: int = 8) -> Topology:
+    """A pod slice: one HBM contention domain per chip.  ``n_cores`` is the
+    number of concurrent HBM stream agents modelled per chip (compute-phase
+    loads, DMA prefetch, collective send/recv drains)."""
+    leaves = tuple(
+        ContentionDomain(f"{tpu.name}/chip{c}", n_cores=streams_per_chip,
+                         tpu=tpu)
+        for c in range(n_chips))
+    return Topology(TopologyNode(f"{tpu.name}-pod{n_chips}", leaves))
+
+
+# Ready-made machines.  x86 names follow the paper's Table I; the -2S
+# variants are the dual-socket nodes the paper's HPCG runs used, and
+# ROME-2S-NPS4 is the eight-quadrant layout of a dual Rome node.
+PRESETS: dict[str, "Topology"] = {}
+
+
+def _register(topo: Topology) -> Topology:
+    PRESETS[topo.name] = topo
+    return topo
+
+
+for _m in (BDW1, BDW2, CLX, ROME):
+    _register(single_domain(_m))
+_register(multi_socket(BDW1, 2))
+_register(multi_socket(BDW2, 2))
+_register(multi_socket(CLX, 2))
+_register(multi_socket(ROME, 2, domains_per_socket=4))
+_register(tpu_pod(TPU_V5E, 4))
+_register(tpu_pod(TPU_V5E, 8))
+
+
+def preset(name: str) -> Topology:
+    """Look up a ready-made topology by name (see :data:`PRESETS`)."""
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown topology preset {name!r}; available: "
+                       f"{sorted(PRESETS)}") from None

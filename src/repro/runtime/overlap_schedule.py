@@ -15,11 +15,13 @@ streams — exactly the effect the paper models with Eqs. 4–5.
 from __future__ import annotations
 
 import dataclasses
+from typing import Mapping, Sequence
 
 from ..configs.base import ModelConfig
 from ..core.hlo import RooflineTerms
 from ..core.machine import TPU_V5E, TpuModel
 from ..core.overlap import Phase, best_bucket_count, overlap_pair
+from ..core.topology import Topology, tpu_pod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,3 +63,54 @@ def plan_gradient_overlap(terms: RooflineTerms, *,
         t_planned=min(t_planned, t_serial),
         t_naive_roofline=pred.t_naive,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class PodOverlapPlan:
+    """Per-chip overlap plans across a pod slice: each chip's HBM domain is
+    independent, so the step time is gated by the slowest chip."""
+
+    topology: Topology
+    by_chip: Mapping[str, OverlapPlan]
+
+    @property
+    def t_step(self) -> float:
+        """Data-parallel step time: the allreduce gates on the slowest
+        chip's planned time."""
+        return max(p.t_planned for p in self.by_chip.values())
+
+    @property
+    def straggler_chip(self) -> str:
+        return max(self.by_chip, key=lambda c: self.by_chip[c].t_planned)
+
+
+def plan_pod_overlap(terms: RooflineTerms, *,
+                     topology: Topology | None = None,
+                     chip_load: Sequence[float] | None = None,
+                     backward_frac: float = 2 / 3,
+                     tpu: TpuModel = TPU_V5E) -> PodOverlapPlan:
+    """Plan gradient overlap per chip of a pod topology.
+
+    Each leaf domain of ``topology`` (default: a 4-chip v5e pod from
+    :func:`repro.core.topology.tpu_pod`) is planned independently —
+    contention domains do not interact, so a straggling chip changes only
+    its own plan.  ``chip_load`` scales each chip's compute/HBM work
+    (data-parallel imbalance, e.g. ragged batch shards); default uniform.
+    """
+    topo = topology if topology is not None else tpu_pod(tpu)
+    chips = topo.domain_names
+    load = tuple(chip_load) if chip_load is not None else (1.0,) * len(chips)
+    if len(load) != len(chips):
+        raise ValueError(
+            f"chip_load has {len(load)} entries for {len(chips)} chips")
+    by_chip = {}
+    for chip, scale in zip(chips, load):
+        scaled = dataclasses.replace(
+            terms,
+            t_compute=terms.t_compute * scale,
+            t_memory=terms.t_memory * scale,
+            flops=terms.flops * scale,
+            hbm_bytes=terms.hbm_bytes * scale)
+        by_chip[chip] = plan_gradient_overlap(
+            scaled, backward_frac=backward_frac, tpu=tpu)
+    return PodOverlapPlan(topology=topo, by_chip=by_chip)

@@ -20,6 +20,7 @@ from typing import Sequence
 from ..core.desync import (Allreduce, DesyncSimulator, Idle, Work,
                            durations_by_tag, skewness)
 from ..core.sharing import Group
+from ..core.topology import Topology
 
 
 @dataclasses.dataclass
@@ -57,10 +58,18 @@ class StragglerMonitor:
             self.observed_skew > 0
 
     def predict_amplification(self, phases: Sequence[StepPhase], *,
-                              probe: int = 1) -> float:
+                              probe: int = 1,
+                              topology: Topology | None = None,
+                              placement: Sequence[str] | None = None
+                              ) -> float:
         """Simulate a barrier-free loop of the given phases and return the
         skewness of phase[probe]'s accumulated time — positive means the
-        configuration amplifies desync and needs periodic barriers."""
+        configuration amplifies desync and needs periodic barriers.
+
+        ``topology``/``placement`` pin workers to contention domains (e.g.
+        one HBM domain per chip of a :func:`repro.core.topology.tpu_pod`):
+        workers only amplify each other's skew through domains they share.
+        """
         import random
         rng = random.Random(0)
         specs = {}
@@ -79,6 +88,7 @@ class StragglerMonitor:
             prog += [Work(ph.name, ph.bytes_hbm, tag=ph.name)
                      for ph in phases]
             progs.append(prog)
-        sim = DesyncSimulator(progs, "TPU", specs=specs)
+        sim = DesyncSimulator(progs, "TPU", specs=specs,
+                              topology=topology, placement=placement)
         recs = sim.run(t_max=120.0)
         return skewness(durations_by_tag(recs, phases[probe].name))

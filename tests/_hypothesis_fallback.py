@@ -1,0 +1,151 @@
+"""Deterministic stand-in for the ``hypothesis`` property-testing API.
+
+The container this repo is developed in does not ship ``hypothesis`` and no
+new packages may be installed.  This module provides the small slice of the
+API our tests use (``given``, ``settings``, and the ``strategies`` functions
+``integers``, ``floats``, ``lists``, ``builds``, ``sampled_from`` plus the
+``.filter``/``.map`` combinators) backed by a seeded ``random.Random`` so
+runs are reproducible.  When the real ``hypothesis`` is importable it is
+always preferred — see ``conftest.py`` — so environments that have it lose
+nothing (shrinking, the example database, health checks).
+
+Sampling intentionally over-weights boundary values (min/max of numeric
+ranges, min/max list sizes) because those are where the model code has
+special cases (n=0 groups, f=1 saturation).
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+import zlib
+
+_BOUNDARY_PROB = 0.15
+_FILTER_TRIES = 5000
+
+
+class SearchStrategy:
+    """A lazily-evaluated value generator, mirroring hypothesis' type."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example_with(self, rng: random.Random):
+        return self._draw(rng)
+
+    def filter(self, predicate) -> "SearchStrategy":
+        base = self._draw
+
+        def draw(rng):
+            for _ in range(_FILTER_TRIES):
+                value = base(rng)
+                if predicate(value):
+                    return value
+            raise RuntimeError(
+                "fallback-hypothesis: .filter predicate rejected "
+                f"{_FILTER_TRIES} consecutive examples")
+
+        return SearchStrategy(draw)
+
+    def map(self, fn) -> "SearchStrategy":
+        base = self._draw
+        return SearchStrategy(lambda rng: fn(base(rng)))
+
+
+def integers(min_value: int = -(2**16), max_value: int = 2**16
+             ) -> SearchStrategy:
+    def draw(rng):
+        if rng.random() < _BOUNDARY_PROB:
+            return rng.choice((min_value, max_value))
+        return rng.randint(min_value, max_value)
+    return SearchStrategy(draw)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, *,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           width: int = 64, **_ignored) -> SearchStrategy:
+    def draw(rng):
+        if rng.random() < _BOUNDARY_PROB:
+            return rng.choice((min_value, max_value))
+        return rng.uniform(min_value, max_value)
+    return SearchStrategy(draw)
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0, max_size: int = 10,
+          **_ignored) -> SearchStrategy:
+    def draw(rng):
+        if rng.random() < _BOUNDARY_PROB:
+            size = rng.choice((min_size, max_size))
+        else:
+            size = rng.randint(min_size, max_size)
+        return [elements.example_with(rng) for _ in range(size)]
+    return SearchStrategy(draw)
+
+
+def sampled_from(population) -> SearchStrategy:
+    population = list(population)
+    return SearchStrategy(lambda rng: rng.choice(population))
+
+
+def builds(target, *arg_strategies, **kwarg_strategies) -> SearchStrategy:
+    def draw(rng):
+        args = [s.example_with(rng) for s in arg_strategies]
+        kwargs = {k: s.example_with(rng)
+                  for k, s in kwarg_strategies.items()}
+        return target(*args, **kwargs)
+    return SearchStrategy(draw)
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    """Record run parameters on the test function for ``given`` to read."""
+    def decorate(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return decorate
+
+
+def given(*arg_strategies, **kwarg_strategies):
+    """Run the test once per generated example, deterministically seeded
+    per test name so failures reproduce across runs."""
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper():
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            n_examples = getattr(fn, "_fallback_max_examples", 100)
+            for _ in range(n_examples):
+                args = [s.example_with(rng) for s in arg_strategies]
+                kwargs = {k: s.example_with(rng)
+                          for k, s in kwarg_strategies.items()}
+                fn(*args, **kwargs)
+        # Drop the functools.wraps back-reference: pytest follows
+        # __wrapped__ to the original signature and would then try to
+        # fixture-inject the strategy-supplied parameters.
+        del wrapper.__wrapped__
+        return wrapper
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    this = sys.modules[__name__]
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = this
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, filter_too_much=None, data_too_large=None)
+    hyp.assume = lambda condition: True
+    hyp.__version__ = "0.0-fallback"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = this

@@ -1,0 +1,18 @@
+"""Test-suite bootstrap.
+
+Prefers the real ``hypothesis`` package; in hermetic containers where it is
+unavailable (and cannot be installed), registers the deterministic fallback
+from ``_hypothesis_fallback.py`` before test modules import it.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+try:
+    import hypothesis  # noqa: F401  (real package wins when present)
+except ModuleNotFoundError:
+    import _hypothesis_fallback
+
+    _hypothesis_fallback.install()

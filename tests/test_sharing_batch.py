@@ -1,0 +1,149 @@
+"""Batched (vmapped) sharing solver vs. the scalar reference path.
+
+Acceptance gate of the topology PR: the vmapped solver must match the
+scalar solver to <= 1e-6 relative error on all Table 2 kernel pairings,
+and degenerate scenarios (no groups, one saturated group, all-idle) must
+be well-defined.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import sharing, table2
+from repro.core.sharing import HAVE_JAX, Group
+
+BACKENDS = ["numpy"] + (["jax"] if HAVE_JAX else [])
+
+UTIL_MODES = ["recursion", "queue", 0.7]
+
+
+def _table2_pair_scenarios(arch, n_a=5, n_b=5):
+    names = sorted(table2.TABLE2)
+    scens = []
+    for ka in names:
+        for kb in names:
+            scens.append([Group.of(table2.kernel(ka), arch, n_a),
+                          Group.of(table2.kernel(kb), arch, n_b)])
+    return scens
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("arch", table2.ARCHS)
+def test_batch_matches_scalar_on_table2_pairings(backend, arch):
+    """<= 1e-6 relative agreement on every Table 2 x Table 2 pairing."""
+    scens = _table2_pair_scenarios(arch)
+    batch = sharing.predict_batch(scens, backend=backend)
+    for i, gs in enumerate(scens):
+        ref = sharing.predict(gs)
+        assert batch.b_overlap[i] == pytest.approx(ref.b_overlap, rel=1e-6)
+        for j in range(2):
+            assert batch.alphas[i, j] == pytest.approx(
+                ref.alphas[j], rel=1e-6)
+            assert batch.bw_group[i, j] == pytest.approx(
+                ref.bw_group[j], rel=1e-6)
+            assert batch.bw_per_core[i, j] == pytest.approx(
+                ref.bw_per_core[j], rel=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("util", UTIL_MODES)
+def test_batch_matches_scalar_across_modes(backend, util):
+    """Agreement holds in every utilization mode, with uneven splits and
+    >2 groups."""
+    rng = np.random.default_rng(7)
+    scens = []
+    for _ in range(40):
+        g = rng.integers(1, 5)
+        scens.append([Group(n=int(rng.integers(0, 12)),
+                            f=float(rng.uniform(0.05, 1.0)),
+                            bs=float(rng.uniform(20.0, 200.0)))
+                      for _ in range(g)])
+    batch = sharing.predict_batch(scens, utilization=util, backend=backend)
+    for i, gs in enumerate(scens):
+        ref = sharing.predict(gs, utilization=util)
+        assert batch.total_bw[i] == pytest.approx(
+            sum(ref.bw_group), rel=1e-6, abs=1e-12)
+        for j in range(len(gs)):
+            assert batch.bw_group[i, j] == pytest.approx(
+                ref.bw_group[j], rel=1e-6, abs=1e-12)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_saturated_flag(backend):
+    scens = [[Group(n=2, f=0.2, bs=100.0), Group(n=2, f=0.4, bs=80.0)]]
+    batch = sharing.predict_batch(scens, saturated=True, backend=backend)
+    ref = sharing.predict(scens[0], saturated=True)
+    assert batch.util[0] == pytest.approx(1.0)
+    assert batch.total_bw[0] == pytest.approx(ref.total_bw, rel=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_degenerate_no_active_groups(backend):
+    """n = 0 everywhere (all-idle domain): zero bandwidth, no NaNs."""
+    batch = sharing.solve_batch([[0, 0]], [[0.3, 0.5]], [[100.0, 90.0]],
+                                backend=backend)
+    assert batch.b_overlap[0] == 0.0
+    assert batch.total_bw[0] == 0.0
+    assert not np.isnan(batch.alphas).any()
+    assert not np.isnan(batch.bw_per_core).any()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_degenerate_single_saturated_group(backend):
+    """One group past its saturation knee attains exactly b_s (queue
+    law), matching the scalar path."""
+    spec = table2.kernel("DDOT2")
+    f, bs = spec.f["CLX"], spec.bs["CLX"]
+    n_sat = int(1 / f) + 5
+    batch = sharing.solve_batch([[n_sat]], [[f]], [[bs]],
+                                utilization="queue", backend=backend)
+    assert batch.total_bw[0] == pytest.approx(bs, rel=1e-12)
+    ref = sharing.predict([Group.of(spec, "CLX", n_sat)],
+                          utilization="queue")
+    assert batch.total_bw[0] == pytest.approx(ref.total_bw, rel=1e-6)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_padding_groups_are_neutral(backend):
+    """Appending n=0 padding columns never changes the live groups."""
+    n = [[3, 5]]
+    f = [[0.3, 0.2]]
+    bs = [[60.0, 70.0]]
+    plain = sharing.solve_batch(n, f, bs, backend=backend)
+    padded = sharing.solve_batch([[3, 5, 0, 0]], [[0.3, 0.2, 0.9, 0.1]],
+                                 [[60.0, 70.0, 500.0, 1.0]],
+                                 backend=backend)
+    np.testing.assert_allclose(padded.bw_group[0, :2], plain.bw_group[0],
+                               rtol=1e-12)
+    np.testing.assert_allclose(padded.bw_group[0, 2:], 0.0)
+
+
+def test_empty_group_list_scalar():
+    pred = sharing.predict([])
+    assert pred.bw_group == ()
+    assert pred.b_overlap == 0.0
+
+
+@pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+def test_jax_and_numpy_backends_agree():
+    rng = np.random.default_rng(3)
+    n = rng.integers(0, 20, size=(64, 4)).astype(float)
+    f = rng.uniform(0.01, 1.0, size=(64, 4))
+    bs = rng.uniform(10.0, 300.0, size=(64, 4))
+    for util in UTIL_MODES:
+        a = sharing.solve_batch(n, f, bs, utilization=util, backend="numpy")
+        b = sharing.solve_batch(n, f, bs, utilization=util, backend="jax")
+        np.testing.assert_allclose(a.bw_group, b.bw_group, rtol=1e-9)
+        np.testing.assert_allclose(a.util, b.util, rtol=1e-9)
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="shape mismatch"):
+        sharing.solve_batch([[1, 2]], [[0.5]], [[100.0, 90.0]])
+
+
+def test_unknown_backend_and_mode():
+    with pytest.raises(ValueError, match="backend"):
+        sharing.solve_batch([[1]], [[0.5]], [[10.0]], backend="tpu")
+    with pytest.raises(ValueError, match="utilization"):
+        sharing.solve_batch([[1]], [[0.5]], [[10.0]], utilization="magic")
