@@ -1,0 +1,156 @@
+"""Throughput benchmark for the batched desync engine.
+
+Measures engine throughput in retired events per second over
+
+* a rank sweep      R ∈ {8, 64, 512} at B = 1, and
+* a scenario sweep  B ∈ {1, 32, 256} at R = 64,
+
+plus the headline comparison: a B = 256, R = 64 ensemble in one
+``run_batch`` call versus 256 sequential scalar ``DesyncSimulator.run``
+calls of the same scenarios (the speedup that makes seed-ensemble skew
+estimation and candidate-plan search affordable).
+
+Run:  PYTHONPATH=src python benchmarks/desync_scaling.py [--quick]
+                                                         [--out FILE]
+
+Writes ``BENCH_desync.json`` (perf-trajectory artifact) and prints the
+usual ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import random
+import time
+
+from repro.core.desync import Allreduce, DesyncSimulator, Idle, Work
+from repro.core.desync_batch import run_batch
+
+MB = 1e6
+ARCH = "CLX"
+T_MAX = 60.0
+
+
+def hpcg_programs(n_ranks: int, seed: int):
+    """The Fig. 1 HPCG iteration (noise → SymGS → DDOT2 → allreduce →
+    DAXPY), scaled down so event count, not simulated seconds, dominates."""
+    rng = random.Random(seed)
+    progs = []
+    for _ in range(n_ranks):
+        progs.append([
+            Idle(rng.expovariate(1 / 6e-5), tag="noise"),
+            Work("Schoenauer", 4 * MB, tag="symgs"),
+            Work("DDOT2", 0.8 * MB, tag="ddot2"),
+            Allreduce(),
+            Work("DAXPY", 3 * MB, tag="daxpy"),
+        ])
+    return progs
+
+
+def scenarios(n_scenarios: int, n_ranks: int):
+    return [hpcg_programs(n_ranks, seed) for seed in range(n_scenarios)]
+
+
+def measure_batched(n_scenarios: int, n_ranks: int, *,
+                    backend: str = "numpy") -> dict:
+    batch = scenarios(n_scenarios, n_ranks)
+    t0 = time.perf_counter()
+    res = run_batch(batch, ARCH, t_max=T_MAX, backend=backend)
+    wall = time.perf_counter() - t0
+    return {
+        "mode": f"batched-{backend}",
+        "B": n_scenarios,
+        "R": n_ranks,
+        "events": res.n_events,
+        "steps": res.n_steps,
+        "wall_s": wall,
+        "events_per_s": res.n_events / wall if wall > 0 else float("inf"),
+    }
+
+
+def measure_sequential(n_scenarios: int, n_ranks: int) -> dict:
+    batch = scenarios(n_scenarios, n_ranks)
+    events = 0
+    t0 = time.perf_counter()
+    for progs in batch:
+        events += len(DesyncSimulator(progs, ARCH).run(t_max=T_MAX))
+    wall = time.perf_counter() - t0
+    return {
+        "mode": "sequential-scalar",
+        "B": n_scenarios,
+        "R": n_ranks,
+        "events": events,
+        "wall_s": wall,
+        "events_per_s": events / wall if wall > 0 else float("inf"),
+    }
+
+
+def run_grid(*, quick: bool = False) -> dict:
+    rank_sweep = [8, 64] if quick else [8, 64, 512]
+    scen_sweep = [1, 32] if quick else [1, 32, 256]
+    speedup_b = 32 if quick else 256
+    speedup_r = 64
+
+    out = {
+        "benchmark": "desync_scaling",
+        "arch": ARCH,
+        "quick": quick,
+        "rank_sweep": [measure_batched(1, r) for r in rank_sweep],
+        "scenario_sweep": [measure_batched(b, 64) for b in scen_sweep],
+    }
+    seq = measure_sequential(speedup_b, speedup_r)
+    bat = measure_batched(speedup_b, speedup_r)
+    out["speedup"] = {
+        "B": speedup_b,
+        "R": speedup_r,
+        "sequential": seq,
+        "batched": bat,
+        "x": seq["wall_s"] / bat["wall_s"] if bat["wall_s"] > 0
+        else float("inf"),
+    }
+    return out
+
+
+def rows():
+    """CSV rows for benchmarks/run.py (quick grid, so the driver stays
+    fast; the full grid runs via __main__ / the slow CI job)."""
+    grid = run_grid(quick=True)
+    out = []
+    for entry in grid["rank_sweep"] + grid["scenario_sweep"]:
+        out.append((
+            f"desync_scaling/B{entry['B']}xR{entry['R']}",
+            entry["wall_s"] * 1e6,
+            f"events={entry['events']};events_per_s="
+            f"{entry['events_per_s']:.0f}"))
+    sp = grid["speedup"]
+    out.append((
+        f"desync_scaling/speedup_B{sp['B']}xR{sp['R']}",
+        sp["batched"]["wall_s"] * 1e6,
+        f"speedup_vs_sequential={sp['x']:.1f}x"))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid (smoke test)")
+    ap.add_argument("--out", default="BENCH_desync.json",
+                    help="JSON output path")
+    args = ap.parse_args()
+    grid = run_grid(quick=args.quick)
+    with open(args.out, "w") as fh:
+        json.dump(grid, fh, indent=2)
+    for entry in grid["rank_sweep"] + grid["scenario_sweep"]:
+        print(f"B={entry['B']:>4} R={entry['R']:>4}  "
+              f"{entry['events']:>7} events  {entry['wall_s']:8.3f}s  "
+              f"{entry['events_per_s']:>10.0f} events/s")
+    sp = grid["speedup"]
+    print(f"B={sp['B']} R={sp['R']} batched {sp['batched']['wall_s']:.3f}s "
+          f"vs sequential {sp['sequential']['wall_s']:.3f}s  ->  "
+          f"{sp['x']:.1f}x")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -53,7 +53,8 @@ def run_scenario(tail, seeds=range(6)):
     for s in seeds:
         sim = DesyncSimulator(_programs(tail, s), ARCH)
         recs = sim.run(t_max=60)
-        sks.append(skewness(durations_by_tag(recs, "ddot2")))
+        sks.append(skewness(durations_by_tag(recs, "ddot2",
+                                             n_ranks=N_RANKS)))
         sss.append(start_spread(recs, "ddot2"))
         ess.append(end_spread(recs, "ddot2"))
         dd = sorted((r.start, r.duration) for r in recs if r.tag == "ddot2")

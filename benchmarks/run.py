@@ -10,8 +10,8 @@ import argparse
 import sys
 import traceback
 
-from . import (fig6_full_domain, fig7_symmetric, fig8_error, fig9_pairings,
-               hpcg_desync, table2_kernels, tpu_overlap)
+from . import (desync_scaling, fig6_full_domain, fig7_symmetric, fig8_error,
+               fig9_pairings, hpcg_desync, table2_kernels, tpu_overlap)
 
 MODULES = {
     "table2": table2_kernels,
@@ -21,6 +21,7 @@ MODULES = {
     "fig9": fig9_pairings,
     "hpcg": hpcg_desync,
     "tpu_overlap": tpu_overlap,
+    "desync_scaling": desync_scaling,
 }
 
 

@@ -25,7 +25,7 @@ def run(tail, label):
     rng = random.Random(7)
     sim = DesyncSimulator([program(rng, tail) for _ in range(N)], "CLX")
     recs = sim.run(t_max=60)
-    dd = durations_by_tag(recs, "ddot2")
+    dd = durations_by_tag(recs, "ddot2", n_ranks=N)
     starts = {r.rank: r.start for r in recs if r.tag == "ddot2"}
     print(f"\n--- {label} ---")
     print(f"DDOT2 accumulated-time skewness: {skewness(dd):+.2f}")

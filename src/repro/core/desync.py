@@ -96,6 +96,7 @@ class _RankState:
     remaining_bytes: float = 0.0
     ready_at: float = 0.0       # for Idle / collective cost
     blocked: bool = False       # waiting on allreduce / neighbors
+    releasing: bool = False     # neighbor wait satisfied, draining its cost
     started_current: float = 0.0
 
     @property
@@ -140,6 +141,26 @@ class DesyncSimulator:
         spec = self.specs[kernel]
         return Group.of(spec, self.arch, n)
 
+    @classmethod
+    def run_batch(cls, programs_batch, arch: str,
+                  specs: dict[str, KernelSpec] | None = None, *,
+                  topology: Topology | None = None,
+                  placement: Sequence[str] | None = None,
+                  t_max: float = 10.0, backend: str = "numpy"):
+        """Run B independent scenarios in one batched simulation.
+
+        ``programs_batch`` is a B-long sequence of scenarios, each an R-long
+        sequence of per-rank programs (same R across scenarios; topology and
+        placement are shared).  Returns a
+        :class:`repro.core.desync_batch.BatchRunResult`; with B = 1 the
+        records reproduce :meth:`run` exactly.  See
+        :mod:`repro.core.desync_batch` for the engine.
+        """
+        from .desync_batch import run_batch as _run_batch
+        return _run_batch(programs_batch, arch, specs,
+                          topology=topology, placement=placement,
+                          t_max=t_max, backend=backend)
+
     def run(self, *, t_max: float = 10.0) -> list[Record]:
         ranks = [_RankState(program=p) for p in self.programs]
         n = len(ranks)
@@ -166,6 +187,7 @@ class DesyncSimulator:
                        start=st.started_current, end=now))
             st.pc += 1
             st.blocked = False
+            st.releasing = False
             if not st.done:
                 begin_item(r, now)
 
@@ -174,12 +196,18 @@ class DesyncSimulator:
                 begin_item(r, 0.0)
 
         while t < t_max and not all(st.done for st in ranks):
-            # -- resolve collectives: if every non-done rank is blocked at an
-            # Allreduce with the same tag position, release them together.
-            resolved = self._resolve_allreduce(ranks, t, finish_item)
-            resolved |= self._resolve_neighbors(ranks, t, finish_item)
-            if resolved:
+            # -- resolve collectives: when every rank is blocked at an
+            # Allreduce, the collective runs for its cost and the *global*
+            # clock advances with it — no record may start before time has
+            # actually progressed.
+            t_after = self._resolve_allreduce(ranks, t, finish_item)
+            if t_after is not None:
+                t = t_after
                 continue  # re-evaluate doneness/groups after retirements
+            # -- neighbor waits whose dependency is now satisfied start
+            # draining their p2p cost: they retire ``cost_s`` later, through
+            # the normal event loop (so the cost occupies real clock time).
+            self._release_neighbors(ranks, t)
 
             # -- group working ranks by (domain, kernel)
             working: dict[tuple[str, str], list[int]] = defaultdict(list)
@@ -216,7 +244,7 @@ class DesyncSimulator:
                     continue
                 if isinstance(it, Work) and r in rates and rates[r] > 0:
                     dt = min(dt, st.remaining_bytes / rates[r])
-                elif isinstance(it, Idle):
+                elif isinstance(it, Idle) or st.releasing:
                     dt = min(dt, max(st.ready_at - t, 0.0))
             if not math.isfinite(dt):
                 # Only blocked ranks remain but no collective resolved — a
@@ -234,43 +262,54 @@ class DesyncSimulator:
                     st.remaining_bytes -= rates[r] * dt
                     if st.remaining_bytes <= EPS * max(1.0, it.bytes):
                         finish_item(r, t)
-                elif isinstance(it, Idle) and t >= st.ready_at - EPS:
+                elif (isinstance(it, Idle) or st.releasing) and \
+                        t >= st.ready_at - EPS:
                     finish_item(r, t)
 
         return self.records
 
     # -- collective resolution ------------------------------------------------
 
-    def _resolve_allreduce(self, ranks, t, finish_item) -> bool:
+    def _resolve_allreduce(self, ranks, t, finish_item) -> float | None:
+        """Release a fully-assembled allreduce; returns the advanced global
+        clock (``t + cost``), or ``None`` if the collective is not ready.
+
+        The clock *must* advance with the collective's cost: finishing items
+        at ``t + cost`` while the loop keeps integrating from ``t`` would
+        let subsequent work accrue bandwidth during the collective — i.e.
+        collectives would be free, and records could start before global
+        time reached their start.
+        """
         blocked = [(r, st) for r, st in enumerate(ranks)
                    if isinstance(st.current(), Allreduce) and st.blocked]
         if not blocked:
-            return False
+            return None
         # MPI semantics: the collective is over the full communicator — a
         # rank that already exited can never participate again.
         if len(blocked) == len(ranks):
             cost = max(st.current().cost_s for _, st in blocked)
+            t_after = t + cost
             for r, _ in blocked:
-                finish_item(r, t + cost)
-            return True
-        return False
+                finish_item(r, t_after)
+            return t_after
+        return None
 
-    def _resolve_neighbors(self, ranks, t, finish_item) -> bool:
+    def _release_neighbors(self, ranks, t) -> None:
+        """Mark satisfied neighbor waits as draining: the rank retires the
+        item ``cost_s`` of *global* time later (via ``ready_at``), not at a
+        fabricated future timestamp while the clock stands still.  Because
+        the waiter's ``pc`` only advances at retirement, dependency chains
+        propagate with the p2p latency instead of collapsing instantly."""
         n = len(ranks)
-        progressed = True
-        any_resolved = False
-        while progressed:
-            progressed = False
-            for r, st in enumerate(ranks):
-                it = st.current()
-                if not (isinstance(it, WaitNeighbors) and st.blocked):
-                    continue
-                nbrs = [x for x in (r - 1, r + 1) if 0 <= x < n]
-                if all(ranks[x].pc >= st.pc or ranks[x].done for x in nbrs):
-                    finish_item(r, t + it.cost_s)
-                    progressed = True
-                    any_resolved = True
-        return any_resolved
+        for r, st in enumerate(ranks):
+            it = st.current()
+            if not (isinstance(it, WaitNeighbors) and st.blocked):
+                continue
+            nbrs = [x for x in (r - 1, r + 1) if 0 <= x < n]
+            if all(ranks[x].pc >= st.pc or ranks[x].done for x in nbrs):
+                st.blocked = False
+                st.releasing = True
+                st.ready_at = t + it.cost_s
 
 
 # --------------------------------------------------------------------------
@@ -278,13 +317,27 @@ class DesyncSimulator:
 # --------------------------------------------------------------------------
 
 
-def durations_by_tag(records: Sequence[Record], tag: str) -> list[float]:
-    """Accumulated time per rank spent in items with ``tag``."""
+def durations_by_tag(records: Sequence[Record], tag: str, *,
+                     n_ranks: int | None = None,
+                     missing: float = 0.0) -> list[float]:
+    """Accumulated time per rank spent in items with ``tag``.
+
+    Returns one entry per rank ``0 .. n_ranks-1``.  ``n_ranks`` defaults to
+    the highest rank appearing in *any* record plus one, so a straggler that
+    never retired a ``tag`` item within ``t_max`` still shows up — as
+    ``missing`` (default 0.0; pass ``float('nan')`` to make truncation
+    explicit) — instead of being silently dropped from the sample that
+    :func:`skewness` is computed over.
+    """
+    if n_ranks is None:
+        n_ranks = max((rec.rank for rec in records), default=-1) + 1
     acc: dict[int, float] = defaultdict(float)
+    tagged: set[int] = set()
     for rec in records:
         if rec.tag == tag:
             acc[rec.rank] += rec.duration
-    return [acc[r] for r in sorted(acc)]
+            tagged.add(rec.rank)
+    return [acc[r] if r in tagged else missing for r in range(n_ranks)]
 
 
 def skewness(xs: Sequence[float]) -> float:

@@ -301,6 +301,7 @@ class BatchSharePrediction:
     alphas: np.ndarray     # (B, G) Eq. 5 request shares
     util: np.ndarray       # (B,)   interface utilization factors
     bw_group: np.ndarray   # (B, G) attained bandwidth per group [GB/s]
+    names: tuple[tuple[str, ...], ...] | None = None  # (B, G) group labels
 
     @property
     def bw_per_core(self) -> np.ndarray:
@@ -317,10 +318,13 @@ class BatchSharePrediction:
 
     def scenario(self, i: int) -> "SharePrediction":
         """Materialize scenario ``i`` as a scalar-API prediction (padding
-        groups dropped)."""
+        groups dropped).  Group names survive the round trip when the batch
+        was built with them (see :func:`groups_to_arrays`)."""
         keep = [j for j in range(self.n.shape[1]) if self.n[i, j] > 0]
         groups = tuple(Group(n=int(self.n[i, j]), f=float(self.f[i, j]),
-                             bs=float(self.bs[i, j]))
+                             bs=float(self.bs[i, j]),
+                             name=(self.names[i][j] if self.names is not None
+                                   else ""))
                        for j in keep)
         return SharePrediction(
             groups=groups, b_overlap=float(self.b_overlap[i]),
@@ -328,13 +332,16 @@ class BatchSharePrediction:
             bw_group=tuple(float(self.bw_group[i, j]) for j in keep))
 
 
-def solve_batch(n, f, bs, *, utilization: str | float = "recursion",
+def solve_batch(n, f, bs, names=None, *,
+                utilization: str | float = "recursion",
                 p0_factor: float = 0.5, saturated: bool | None = None,
                 backend: str = "auto") -> BatchSharePrediction:
     """Solve Eqs. 4–5 for a batch of scenarios.
 
     ``n``, ``f``, ``bs``: array-likes of shape ``(B, G)`` (a single ``(G,)``
     scenario is promoted to B = 1).  Groups with ``n = 0`` act as padding.
+    ``names``: optional ``(B, G)`` nested sequence of group labels, carried
+    through to :meth:`BatchSharePrediction.scenario` (padding entries "").
     ``backend``: ``"jax"`` (vmapped + jitted), ``"numpy"``, or ``"auto"``
     (jax when importable, else numpy).  Both backends compute in float64
     and agree with the scalar :func:`predict` to ~1e-12 relative.
@@ -345,6 +352,13 @@ def solve_batch(n, f, bs, *, utilization: str | float = "recursion",
     if not (n.shape == f.shape == bs.shape):
         raise ValueError(
             f"shape mismatch: n{n.shape} f{f.shape} bs{bs.shape}")
+    if names is not None:
+        names = tuple(tuple(row) for row in names)
+        if len(names) != n.shape[0] or \
+                any(len(row) != n.shape[1] for row in names):
+            raise ValueError(
+                f"names rows {[len(r) for r in names]} do not match "
+                f"n{n.shape}")
     if backend == "auto":
         backend = "jax" if HAVE_JAX else "numpy"
     if backend == "jax":
@@ -361,21 +375,25 @@ def solve_batch(n, f, bs, *, utilization: str | float = "recursion",
     else:
         raise ValueError(f"unknown backend {backend!r}")
     return BatchSharePrediction(n=n, f=f, bs=bs, b_overlap=b, alphas=alphas,
-                                util=util, bw_group=bw)
+                                util=util, bw_group=bw, names=names)
 
 
 def groups_to_arrays(scenarios: Sequence[Sequence[Group]]
-                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Pack ragged per-scenario group lists into padded ``(B, G)`` arrays."""
+                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                tuple[tuple[str, ...], ...]]:
+    """Pack ragged per-scenario group lists into padded ``(B, G)`` arrays
+    plus a matching ``(B, G)`` grid of group names ("" for padding)."""
     g_max = max((len(s) for s in scenarios), default=0)
     shape = (len(scenarios), max(g_max, 1))
     n = np.zeros(shape)
     f = np.zeros(shape)
     bs = np.zeros(shape)
+    names = [[""] * shape[1] for _ in scenarios]
     for i, sc in enumerate(scenarios):
         for j, g in enumerate(sc):
             n[i, j], f[i, j], bs[i, j] = g.n, g.f, g.bs
-    return n, f, bs
+            names[i][j] = g.name
+    return n, f, bs, tuple(tuple(row) for row in names)
 
 
 def predict_batch(scenarios: Sequence[Sequence[Group]], **kwargs

@@ -64,6 +64,15 @@ class KernelSpec:
         """Paper Eq. 3 inverted: b_meas = f * b_s."""
         return self.f[arch] * self.bs[arch]
 
+    @classmethod
+    def synthetic(cls, name: str, f: float, bs: float, *,
+                  arch: str = "TPU") -> "KernelSpec":
+        """A minimal spec carrying only the two sharing-model inputs —
+        for callers (straggler monitor, pod planners, tests) that model
+        custom phases rather than Table II kernels."""
+        return cls(name=name, body="", reads=1, writes=0, rfo=0,
+                   flops_per_iter=1, f={arch: f}, bs={arch: bs})
+
 
 def _spec(name, body, r, w, rfo, flops, f, bs, read_only=False) -> KernelSpec:
     return KernelSpec(

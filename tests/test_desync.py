@@ -117,3 +117,73 @@ def test_records_are_consistent():
         assert len(rs) == len(progs[rank])
         for a, b in zip(rs, rs[1:]):
             assert b.start >= a.end - 1e-9
+
+
+def _assert_nonoverlapping_monotone(recs, progs):
+    """Every program item retired exactly once, per-rank records are
+    contiguous in program order, strictly non-overlapping, and never
+    start before global time progressed there."""
+    by_rank = {r: [] for r in range(len(progs))}
+    for r in recs:
+        by_rank[r.rank].append(r)
+    for rank, rs in by_rank.items():
+        rs.sort(key=lambda r: r.index)
+        assert [r.index for r in rs] == list(range(len(progs[rank])))
+        for a, b in zip(rs, rs[1:]):
+            assert b.start == a.end  # back-to-back, no time travel
+        for a in rs:
+            assert a.end >= a.start
+
+
+def test_collective_cost_advances_global_clock():
+    """Regression (collective time travel): allreduce cost must occupy
+    global time — finishing at t + cost while the loop keeps integrating
+    from t made collectives free and let records start in the future."""
+    cost = 5e-6
+    progs = [[Allreduce(cost_s=cost), Work("STREAM", MB, tag="w")]
+             for _ in range(4)]
+    recs = DesyncSimulator(progs, "CLX").run()
+    _assert_nonoverlapping_monotone(recs, progs)
+    ar_recs = [r for r in recs if r.tag == "allreduce"]
+    assert all(r.duration == pytest.approx(cost) for r in ar_recs)
+    # Work starts exactly when the collective released, not at t=0.
+    assert all(r.start == pytest.approx(cost)
+               for r in recs if r.tag == "w")
+
+
+def test_p2p_cost_advances_global_clock():
+    """Regression: a satisfied neighbor wait drains its cost through the
+    event loop, so the waiter's records stay monotone and the p2p record
+    has positive duration."""
+    progs = [[Work("STREAM", MB, tag="w"), WaitNeighbors(cost_s=2e-6),
+              Work("STREAM", MB, tag="w2")] for _ in range(4)]
+    recs = DesyncSimulator(progs, "CLX").run()
+    _assert_nonoverlapping_monotone(recs, progs)
+    p2p = [r for r in recs if r.tag == "p2p"]
+    assert len(p2p) == 4
+    assert all(r.duration >= 2e-6 - 1e-12 for r in p2p)
+
+
+def test_hpcg_scenarios_have_no_time_travel():
+    """The Fig. 1/3 scenarios produce per-rank non-overlapping, monotone
+    records after the clock-advance fixes."""
+    for tail in ([Allreduce(), Work("DAXPY", 30 * MB, tag="daxpy")],
+                 [WaitNeighbors(), Work("DAXPY", 30 * MB, tag="daxpy")]):
+        progs = _programs(tail, seed=1)
+        recs = DesyncSimulator(progs, "CLX").run(t_max=60)
+        _assert_nonoverlapping_monotone(recs, progs)
+
+
+def test_durations_by_tag_keeps_silent_ranks():
+    """Regression (silent rank drop): a rank that never retired a tagged
+    item still appears in the per-rank sample instead of shrinking it."""
+    progs = [[Work("STREAM", MB, tag="w")],
+             [Idle(1e-3), Work("STREAM", MB, tag="w")],
+             [Idle(50.0)]]  # never reaches any 'w' item
+    recs = DesyncSimulator(progs, "CLX").run(t_max=1.0)
+    durs = durations_by_tag(recs, "w")
+    assert len(durs) == 3
+    assert durs[0] > 0 and durs[1] > 0 and durs[2] == 0.0
+    nan_durs = durations_by_tag(recs, "w", missing=float("nan"))
+    assert nan_durs[2] != nan_durs[2]  # NaN marks the truncated rank
+    assert durations_by_tag(recs, "w", n_ranks=5)[3:] == [0.0, 0.0]

@@ -137,6 +137,38 @@ def test_jax_and_numpy_backends_agree():
         np.testing.assert_allclose(a.util, b.util, rtol=1e-9)
 
 
+def test_scenario_round_trip_keeps_names():
+    """Named groups survive groups_to_arrays -> solve_batch -> scenario():
+    the batch path must not silently strip kernel labels."""
+    scens = [
+        [Group(n=4, f=0.3, bs=90.0, name="DDOT2"),
+         Group(n=6, f=0.8, bs=70.0, name="DAXPY")],
+        [Group(n=2, f=0.5, bs=110.0, name="STREAM")],
+    ]
+    batch = sharing.predict_batch(scens)
+    for i, gs in enumerate(scens):
+        back = batch.scenario(i)
+        assert [g.name for g in back.groups] == [g.name for g in gs]
+        assert [g.n for g in back.groups] == [g.n for g in gs]
+    # Padding columns (scenario 1 has one group) stay dropped.
+    assert len(batch.scenario(1).groups) == 1
+
+
+def test_groups_to_arrays_returns_padded_names():
+    scens = [[Group(n=1, f=0.2, bs=50.0, name="a")],
+             [Group(n=2, f=0.3, bs=60.0, name="b"),
+              Group(n=3, f=0.4, bs=70.0, name="c")]]
+    n, f, bs, names = sharing.groups_to_arrays(scens)
+    assert names == (("a", ""), ("b", "c"))
+    assert n.shape == (2, 2)
+
+
+def test_solve_batch_names_shape_mismatch_raises():
+    with pytest.raises(ValueError, match="names"):
+        sharing.solve_batch([[1, 2]], [[0.5, 0.5]], [[10.0, 20.0]],
+                            names=(("x",),))
+
+
 def test_shape_mismatch_raises():
     with pytest.raises(ValueError, match="shape mismatch"):
         sharing.solve_batch([[1, 2]], [[0.5]], [[100.0, 90.0]])
