@@ -10,8 +10,9 @@ import argparse
 import sys
 import traceback
 
-from . import (desync_scaling, fig6_full_domain, fig7_symmetric, fig8_error,
-               fig9_pairings, hpcg_desync, table2_kernels, tpu_overlap)
+from . import (calibrate_roundtrip, desync_scaling, fig6_full_domain,
+               fig7_symmetric, fig8_error, fig9_pairings, hpcg_desync,
+               table2_kernels, tpu_overlap)
 
 MODULES = {
     "table2": table2_kernels,
@@ -22,6 +23,7 @@ MODULES = {
     "hpcg": hpcg_desync,
     "tpu_overlap": tpu_overlap,
     "desync_scaling": desync_scaling,
+    "calibrate": calibrate_roundtrip,
 }
 
 

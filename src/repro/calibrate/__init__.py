@@ -1,0 +1,50 @@
+"""Calibration subsystem: fit the model's inputs from measured curves.
+
+The paper's sharing model needs exactly two numbers per kernel and
+architecture — the memory request fraction ``f`` and the saturated
+bandwidth ``b_s`` — which "can either be measured directly or predicted
+using the ECM model".  ``repro.core.ecm`` is the prediction route; this
+package is the *measurement* route, closing the measure→model loop:
+
+  traces   — versioned JSON/ndjson schema for bandwidth-vs-cores scaling
+             curves and paired-share measurements, plus the built-in
+             synthetic generator backed by the queue simulator
+             (:mod:`repro.core.memsim`);
+  fit      — batched profile-least-squares estimators over the Eq. 1–5
+             forward model: all (kernel, arch, seed) cells in one
+             vectorized numpy or ``jax.vmap`` pass, seed-ensemble
+             confidence intervals, Eq. 4 envelope recovery from paired
+             totals, and materialization as first-class
+             :class:`repro.core.table2.KernelSpec` objects;
+  certify  — Fig. 8-style round-trip certification (fit on homogeneous
+             curves, predict held-out paired shares, hold every cell to
+             the paper's < 8 % bound), emitting ``BENCH_calibrate.json``.
+
+Workflow for users with real hardware: record LIKWID/perf scaling curves
+into the trace schema, ``load_traces`` → ``fit_scaling`` →
+``calibrated_specs``, and hand the resulting specs to ``Group.of``, the
+topology solver, or the desync engines — no hand transcription of
+Table II-style values.
+"""
+
+from .certify import (ERROR_BOUND, CellError, CertificationReport,
+                      PairError, certify)
+from .fit import (CalibratedValue, EnvelopeFit, ScalingFit,
+                  aggregate_ensemble, calibrated_specs, fit_envelope,
+                  fit_scaling, fit_scaling_cell, forward_bandwidth,
+                  predict_pairs)
+from .traces import (DOMAIN_CORES, SCHEMA_VERSION, PairTrace, ScalingTrace,
+                     TraceSet, dump_traces, load_traces,
+                     synthesize_ensemble, synthesize_pair_trace,
+                     synthesize_scaling_trace)
+
+__all__ = [
+    "ERROR_BOUND", "CellError", "CertificationReport", "PairError",
+    "certify", "CalibratedValue", "EnvelopeFit", "ScalingFit",
+    "aggregate_ensemble", "calibrated_specs", "fit_envelope",
+    "fit_scaling", "fit_scaling_cell", "forward_bandwidth",
+    "predict_pairs", "DOMAIN_CORES", "SCHEMA_VERSION", "PairTrace",
+    "ScalingTrace", "TraceSet", "dump_traces", "load_traces",
+    "synthesize_ensemble", "synthesize_pair_trace",
+    "synthesize_scaling_trace",
+]

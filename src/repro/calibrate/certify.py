@@ -1,0 +1,292 @@
+"""Round-trip error certification: measure → fit → predict → compare.
+
+The paper validates its model with a Fig. 8-style error study (< 8 %
+everywhere).  This module holds the *calibration* pipeline to the same
+bar, with the queue simulator as ground truth:
+
+1. **measure** — synthesize a seed ensemble of homogeneous scaling curves
+   for every requested (kernel, arch) cell (:mod:`repro.calibrate.traces`);
+2. **fit** — recover ``(f, b_s)`` for all cells in one batched pass
+   (:mod:`repro.calibrate.fit`), timing it against a sequential per-cell
+   baseline;
+3. **predict** — materialize calibrated :class:`KernelSpec` objects and
+   predict held-out *paired* share measurements through the ordinary
+   Eq. 4–5 solver;
+4. **certify** — report per-cell input-recovery error and per-kernel
+   paired-share error, and fail if any exceeds the paper's 8 % bound.
+
+``python -m repro.calibrate.certify --out BENCH_calibrate.json`` writes
+the committed artifact; ``benchmarks/calibrate_roundtrip.py`` wraps the
+same entry point for the benchmark driver and the slow CI job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Sequence
+
+from ..core.table2 import ARCHS, TABLE2, KernelSpec
+from .fit import (aggregate_ensemble, calibrated_specs, fit_scaling,
+                  fit_scaling_cell, predict_pairs)
+from .traces import DOMAIN_CORES, synthesize_ensemble, \
+    synthesize_pair_trace
+
+#: The paper's global error bound (Fig. 8): model within 8 % everywhere.
+ERROR_BOUND = 0.08
+
+
+@dataclasses.dataclass(frozen=True)
+class CellError:
+    """Input-recovery error of one (kernel, arch) cell."""
+
+    kernel: str
+    arch: str
+    f_true: float
+    f_fit: float
+    bs_true: float
+    bs_fit: float
+
+    @property
+    def f_err(self) -> float:
+        return abs(self.f_fit - self.f_true) / self.f_true
+
+    @property
+    def bs_err(self) -> float:
+        return abs(self.bs_fit - self.bs_true) / self.bs_true
+
+
+@dataclasses.dataclass(frozen=True)
+class PairError:
+    """Held-out paired-share prediction error (per kernel of the pair)."""
+
+    kernels: tuple[str, str]
+    arch: str
+    n: tuple[int, int]
+    measured: tuple[float, float]   # memsim ground truth [GB/s]
+    predicted: tuple[float, float]  # Eq. 4–5 with calibrated specs
+
+    @property
+    def errs(self) -> tuple[float, float]:
+        return tuple(abs(p - m) / m if m > 0 else 0.0
+                     for p, m in zip(self.predicted, self.measured))
+
+
+@dataclasses.dataclass
+class CertificationReport:
+    cells: list[CellError]
+    pairs: list[PairError]
+    intervals: dict                 # {(kernel, arch): {"f": ..., "bs": ...}}
+    n_traces: int
+    n_seeds: int
+    noise: float
+    backend: str
+    wall_batched_s: float
+    wall_sequential_s: float
+
+    @property
+    def max_f_err(self) -> float:
+        return max((c.f_err for c in self.cells), default=0.0)
+
+    @property
+    def max_bs_err(self) -> float:
+        return max((c.bs_err for c in self.cells), default=0.0)
+
+    @property
+    def max_pair_err(self) -> float:
+        return max((e for p in self.pairs for e in p.errs), default=0.0)
+
+    @property
+    def speedup(self) -> float:
+        if self.wall_batched_s <= 0:
+            return float("inf")
+        return self.wall_sequential_s / self.wall_batched_s
+
+    def ok(self, bound: float = ERROR_BOUND) -> bool:
+        return (self.max_f_err < bound and self.max_bs_err < bound
+                and self.max_pair_err < bound)
+
+    def worst_cells(self, k: int = 5) -> list[CellError]:
+        return sorted(self.cells,
+                      key=lambda c: max(c.f_err, c.bs_err))[-k:][::-1]
+
+    def to_json_dict(self) -> dict:
+        return {
+            "benchmark": "calibrate_roundtrip",
+            "error_bound": ERROR_BOUND,
+            "ok": self.ok(),
+            "n_traces": self.n_traces,
+            "n_seeds": self.n_seeds,
+            "noise": self.noise,
+            "backend": self.backend,
+            "max_f_err": self.max_f_err,
+            "max_bs_err": self.max_bs_err,
+            "max_pair_err": self.max_pair_err,
+            "fit_wall_s": {
+                "batched": self.wall_batched_s,
+                "sequential_baseline": self.wall_sequential_s,
+                "speedup_x": self.speedup,
+            },
+            "cells": [{
+                "kernel": c.kernel, "arch": c.arch,
+                "f_true": c.f_true, "f_fit": c.f_fit,
+                "f_err": c.f_err, "bs_true": c.bs_true,
+                "bs_fit": c.bs_fit, "bs_err": c.bs_err,
+            } for c in self.cells],
+            "pairs": [{
+                "kernels": list(p.kernels), "arch": p.arch,
+                "n": list(p.n), "measured": list(p.measured),
+                "predicted": list(p.predicted), "errs": list(p.errs),
+            } for p in self.pairs],
+            "intervals": {
+                f"{k}/{a}": {
+                    field: {"value": v.value, "lo": v.lo, "hi": v.hi,
+                            "n_seeds": v.n_seeds}
+                    for field, v in cell.items()
+                } for (k, a), cell in sorted(self.intervals.items())
+            },
+        }
+
+
+def _holdout_pairs(kernels: Sequence[str], archs: Sequence[str],
+                   per_arch: int, truth: dict[str, KernelSpec]
+                   ) -> list[tuple[str, str, str, int, int]]:
+    """A deterministic rotation of kernel pairings and domain splits.
+    Pairings are heterogeneous whenever two distinct kernels are
+    available (a self-pair would re-test the fitted homogeneous curve
+    rather than a held-out mix)."""
+    out = []
+    ks = [k for k in kernels if k in truth]
+    if not ks or per_arch <= 0:
+        return out
+    for ai, arch in enumerate(archs):
+        n_dom = DOMAIN_CORES[arch]
+        for j in range(per_arch):
+            ia = (ai + j) % len(ks)
+            # offset in [1, len-1] -> always a distinct partner when one
+            # exists; a single-kernel grid degenerates to a self-pair.
+            ib = (ia + 1 + j % max(1, len(ks) - 1)) % len(ks)
+            n_a = max(1, (j + 1) * n_dom // (per_arch + 1))
+            out.append((ks[ia], ks[ib], arch, n_a, max(1, n_dom - n_a)))
+    return out
+
+
+def certify(kernels: Sequence[str] | None = None,
+            archs: Sequence[str] | None = None, *,
+            seeds: Sequence[int] = (0, 1, 2), noise: float = 0.02,
+            n_events: int = 12_000, pairs_per_arch: int = 4,
+            utilization: str = "queue", backend: str = "auto",
+            specs: dict[str, KernelSpec] | None = None,
+            sequential_baseline: bool = True) -> CertificationReport:
+    """Run the full measure→fit→predict round trip; see module doc.
+
+    Defaults cover **every** Table II kernel × architecture cell with a
+    3-seed ensemble — the acceptance grid.  ``specs`` overrides the
+    ground-truth table (used by tests to certify synthetic kernels).
+    """
+    truth = dict(TABLE2 if specs is None else specs)
+    kernels = sorted(truth) if kernels is None else list(kernels)
+    archs = list(ARCHS) if archs is None else list(archs)
+
+    # 1. measure — the (kernel × arch × seed) trace grid.
+    traces = synthesize_ensemble(kernels, archs, seeds, noise=noise,
+                                 n_events=n_events, specs=truth)
+
+    # 2. fit — one batched pass, then the per-cell loop it replaces.
+    # Warm both paths once untimed so jit compilation (amortized across
+    # repeated certifications) does not skew the comparison.
+    fit = fit_scaling(traces, utilization=utilization, backend=backend)
+    seen_shapes: set[int] = set()
+    for tr in traces.scaling:
+        if len(tr.cores) not in seen_shapes:
+            seen_shapes.add(len(tr.cores))
+            fit_scaling_cell(tr, utilization=utilization,
+                             backend=fit.backend)
+    t0 = time.perf_counter()
+    fit = fit_scaling(traces, utilization=utilization,
+                      backend=fit.backend)
+    wall_batched = time.perf_counter() - t0
+    wall_seq = 0.0
+    if sequential_baseline:
+        t0 = time.perf_counter()
+        for tr in traces.scaling:
+            fit_scaling_cell(tr, utilization=utilization,
+                             backend=fit.backend)
+        wall_seq = time.perf_counter() - t0
+
+    # 3. aggregate + materialize calibrated specs.
+    intervals = aggregate_ensemble(fit)
+    cal = calibrated_specs(fit, templates=truth)
+    cells = [CellError(
+        kernel=k, arch=a,
+        f_true=truth[k].f[a], f_fit=cal[k].f[a],
+        bs_true=truth[k].bs[a], bs_fit=cal[k].bs[a])
+        for k in kernels for a in archs]
+
+    # 4. held-out paired shares: measured with *true* specs, predicted
+    # with *calibrated* specs — one batched Eq. 4–5 solve for all pairs.
+    held_out = _holdout_pairs(kernels, archs, pairs_per_arch, truth)
+    pair_traces = [synthesize_pair_trace(ka, kb, arch, na, nb,
+                                         seed=17 + i, n_events=n_events,
+                                         specs=truth)
+                   for i, (ka, kb, arch, na, nb) in enumerate(held_out)]
+    predicted = predict_pairs(cal, pair_traces, utilization=utilization)
+    pair_errors = [PairError(
+        kernels=pt.kernels, arch=pt.arch, n=pt.n,
+        measured=pt.bandwidth,
+        predicted=(float(predicted[i, 0]), float(predicted[i, 1])))
+        for i, pt in enumerate(pair_traces)]
+
+    return CertificationReport(
+        cells=cells, pairs=pair_errors, intervals=intervals,
+        n_traces=len(traces), n_seeds=len(seeds), noise=noise,
+        backend=fit.backend, wall_batched_s=wall_batched,
+        wall_sequential_s=wall_seq)
+
+
+#: Reduced certification grid shared by ``--quick`` runs and the
+#: benchmark driver's rows().
+QUICK_GRID = dict(kernels=("DCOPY", "DDOT2", "DAXPY", "JacobiL3-v1"),
+                  archs=("CLX", "ROME"), seeds=(0, 1), n_events=8_000)
+
+
+def certify_quick(*, backend: str = "auto") -> CertificationReport:
+    """The reduced smoke-test grid (one source of truth for every
+    quick entry point)."""
+    g = QUICK_GRID
+    return certify(list(g["kernels"]), list(g["archs"]),
+                   seeds=g["seeds"], n_events=g["n_events"],
+                   backend=backend)
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_calibrate.json",
+                    help="JSON artifact path")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced grid (see QUICK_GRID)")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "numpy", "jax"))
+    args = ap.parse_args(argv)
+    report = (certify_quick(backend=args.backend) if args.quick
+              else certify(backend=args.backend))
+    with open(args.out, "w") as fh:
+        json.dump(report.to_json_dict(), fh, indent=2)
+    print(f"cells={len(report.cells)}  traces={report.n_traces}  "
+          f"backend={report.backend}")
+    print(f"max err: f {report.max_f_err:.2%}  bs {report.max_bs_err:.2%}"
+          f"  pairs {report.max_pair_err:.2%}  (bound {ERROR_BOUND:.0%})")
+    print(f"batched fit {report.wall_batched_s * 1e3:.1f} ms vs "
+          f"sequential per-cell {report.wall_sequential_s * 1e3:.1f} ms "
+          f"->  {report.speedup:.1f}x")
+    for c in report.worst_cells(3):
+        print(f"  worst cell: {c.kernel}/{c.arch}  f {c.f_err:.2%}  "
+              f"bs {c.bs_err:.2%}")
+    print(f"wrote {args.out}  (ok={report.ok()})")
+    return 0 if report.ok() else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

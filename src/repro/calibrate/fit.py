@@ -1,0 +1,422 @@
+"""Batched estimators: recover ``(f, b_s)`` from measured scaling curves.
+
+The forward model is the paper's own (Eqs. 1–5, via
+:func:`repro.core.sharing.utilization_curve`): a homogeneous run of a
+kernel with request fraction ``f`` and saturated bandwidth ``b_s`` attains
+
+    b(n) = b_s · U(n; f)
+
+aggregate bandwidth on ``n`` cores, where ``U`` is the sub-saturation
+utilization law — ``min(1, n·f)`` for the ideal queue interface (which is
+also what the memsim instrument realizes) or the latency-penalty
+recursion for real hardware.  Fitting inverts this curve: ``b_s`` from the
+plateau, ``f`` from the single-core point and the knee position.
+
+The estimator is a *profile least squares* over a fixed ``f`` grid: for
+every candidate ``f`` the optimal ``b_s`` is closed-form (the model is
+linear in ``b_s``), so the residual profile over the grid is computed for
+**all (kernel, arch, seed) cells at once** — one vectorized numpy pass or
+one ``jax.vmap``-ped, jitted pass, no per-cell Python loop — followed by
+a parabolic sub-grid refinement of the winning ``f``.  Seed ensembles
+aggregate into medians with percentile confidence intervals
+(:func:`aggregate_ensemble`), and :func:`calibrated_specs` materializes
+the result as first-class :class:`repro.core.table2.KernelSpec` objects
+that ``Group.of``, the topology solver, and the desync engines consume
+unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from ..core.sharing import HAVE_JAX, solve_batch, utilization_curve
+from ..core.table2 import TABLE2, KernelSpec
+from .traces import PairTrace, ScalingTrace, TraceSet
+
+#: Default candidate grid: log-spaced so relative resolution is uniform
+#: across the physical range of ``f`` (~0.08 on CLX stencils to ~1 on Rome).
+DEFAULT_F_GRID = np.geomspace(0.01, 1.0, 512)
+
+
+def forward_bandwidth(n, f, bs, *, utilization: str = "queue",
+                      p0_factor: float = 0.5) -> np.ndarray:
+    """The Eq. 1–5 forward model: aggregate bandwidth of a homogeneous run
+    at each core count ``n`` (broadcasts like numpy)."""
+    u = utilization_curve(n, f, mode=utilization, p0_factor=p0_factor)
+    return np.asarray(bs) * u
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingFit:
+    """Per-cell ``(f, b_s)`` estimates for a batch of scaling traces."""
+
+    f: np.ndarray          # (C,) fitted request fractions
+    bs: np.ndarray         # (C,) fitted saturated bandwidths [GB/s]
+    rss: np.ndarray        # (C,) residual sum of squares at the optimum
+    traces: tuple[ScalingTrace, ...]
+    utilization: str
+    backend: str
+
+    def __len__(self) -> int:
+        return len(self.traces)
+
+    def cells(self) -> dict[tuple[str, str], list[int]]:
+        """Indices grouped by (kernel, arch) — one entry per seed."""
+        out: dict[tuple[str, str], list[int]] = {}
+        for i, tr in enumerate(self.traces):
+            out.setdefault((tr.kernel, tr.arch), []).append(i)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CalibratedValue:
+    """Seed-ensemble estimate of one model input: median + percentile CI."""
+
+    value: float
+    lo: float
+    hi: float
+    n_seeds: int
+
+    @property
+    def spread(self) -> float:
+        return self.hi - self.lo
+
+
+# ---------------------------------------------------------------------------
+# The batched profile-least-squares pass
+# ---------------------------------------------------------------------------
+
+_EPS = 1e-30
+
+
+def _profile_rss_np(n, y, mask, f_grid, utilization, p0_factor):
+    """Residual profile over the ``f`` grid for all cells at once.
+
+    ``n, y, mask``: ``(C, N)`` padded cell arrays; ``f_grid``: ``(F,)``.
+    Returns ``(rss (C, F), bs_star (C, F))`` where ``bs_star`` is the
+    closed-form optimal ``b_s`` at each candidate ``f``.
+    """
+    u = utilization_curve(n[:, None, :], f_grid[None, :, None],
+                          mode=utilization, p0_factor=p0_factor)  # (C,F,N)
+    u = np.where(mask[:, None, :], u, 0.0)
+    ym = np.where(mask[:, None, :], y[:, None, :], 0.0)
+    num = (ym * u).sum(axis=-1)
+    den = np.maximum((u * u).sum(axis=-1), _EPS)
+    bs_star = num / den                                         # (C, F)
+    resid = ym - bs_star[..., None] * u
+    rss = (np.where(mask[:, None, :], resid, 0.0) ** 2).sum(axis=-1)
+    return rss, bs_star
+
+
+_INVPHI = (np.sqrt(5.0) - 1.0) / 2.0
+_REFINE_ITERS = 32  # bracket shrinks by φ⁻¹ per iter: ~1e-6 of a grid step
+
+
+def _rss_at_np(n, y, mask, f, utilization, p0_factor):
+    """RSS and closed-form ``b_s`` at one candidate ``f`` per cell
+    (``f`` shape ``(C,)``)."""
+    u = utilization_curve(n, f[:, None], mode=utilization,
+                          p0_factor=p0_factor)
+    u = np.where(mask, u, 0.0)
+    ym = np.where(mask, y, 0.0)
+    bs = (ym * u).sum(axis=-1) / np.maximum((u * u).sum(axis=-1), _EPS)
+    rss = (np.where(mask, ym - bs[:, None] * u, 0.0) ** 2).sum(axis=-1)
+    return rss, bs
+
+
+def _fit_cells_np(n, y, mask, f_grid, utilization, p0_factor):
+    rss, _ = _profile_rss_np(n, y, mask, f_grid, utilization, p0_factor)
+    j = rss.argmin(axis=-1)
+    F = len(f_grid)
+    # Golden-section refinement inside the winning grid bracket
+    # [f_{j-1}, f_{j+1}] — vectorized over cells, fixed iteration count.
+    a = f_grid[np.clip(j - 1, 0, F - 1)]
+    b = f_grid[np.clip(j + 1, 0, F - 1)]
+    c = b - _INVPHI * (b - a)
+    d = a + _INVPHI * (b - a)
+    rc, _ = _rss_at_np(n, y, mask, c, utilization, p0_factor)
+    rd, _ = _rss_at_np(n, y, mask, d, utilization, p0_factor)
+    for _ in range(_REFINE_ITERS):
+        left = rc < rd
+        a = np.where(left, a, c)
+        b = np.where(left, d, b)
+        c = b - _INVPHI * (b - a)
+        d = a + _INVPHI * (b - a)
+        rc, _ = _rss_at_np(n, y, mask, c, utilization, p0_factor)
+        rd, _ = _rss_at_np(n, y, mask, d, utilization, p0_factor)
+    f_hat = 0.5 * (a + b)
+    rss_hat, bs_hat = _rss_at_np(n, y, mask, f_hat, utilization,
+                                 p0_factor)
+    return f_hat, bs_hat, rss_hat
+
+
+if HAVE_JAX:
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    from ..core.sharing import utilization_curve_jax
+
+    def _fit_single_jax(n, y, mask, f_grid, p0_factor, n_max, *, mode):
+        """One cell: profile RSS over the f grid + golden-section
+        refinement.  Shapes: ``n, y, mask`` are ``(N,)``; vmapped over
+        the cell axis."""
+        ym = jnp.where(mask, y, 0.0)
+
+        def rss_at(f):
+            u = utilization_curve_jax(n, f, mode=mode,
+                                      p0_factor=p0_factor, n_max=n_max)
+            u = jnp.where(mask, u, 0.0)
+            bs = (ym * u).sum() / jnp.maximum((u * u).sum(), _EPS)
+            rss = ((jnp.where(mask, ym - bs * u, 0.0)) ** 2).sum()
+            return rss, bs
+
+        u = utilization_curve_jax(n[None, :], f_grid[:, None], mode=mode,
+                                  p0_factor=p0_factor, n_max=n_max)  # (F, N)
+        u = jnp.where(mask[None, :], u, 0.0)
+        bs_star = (ym[None, :] * u).sum(-1) / \
+            jnp.maximum((u * u).sum(-1), _EPS)
+        rss = (jnp.where(mask[None, :],
+                         ym[None, :] - bs_star[:, None] * u, 0.0) ** 2
+               ).sum(-1)                                        # (F,)
+        F = f_grid.shape[0]
+        j = jnp.argmin(rss)
+        a = f_grid[jnp.clip(j - 1, 0, F - 1)]
+        b = f_grid[jnp.clip(j + 1, 0, F - 1)]
+
+        def body(_, state):
+            a, b, c, d, rc, rd = state
+            left = rc < rd
+            a = jnp.where(left, a, c)
+            b = jnp.where(left, d, b)
+            c = b - _INVPHI * (b - a)
+            d = a + _INVPHI * (b - a)
+            rc = rss_at(c)[0]
+            rd = rss_at(d)[0]
+            return a, b, c, d, rc, rd
+
+        c = b - _INVPHI * (b - a)
+        d = a + _INVPHI * (b - a)
+        state = (a, b, c, d, rss_at(c)[0], rss_at(d)[0])
+        a, b, *_ = lax.fori_loop(0, _REFINE_ITERS, body, state)
+        f_hat = 0.5 * (a + b)
+        rss_hat, bs_hat = rss_at(f_hat)
+        return f_hat, bs_hat, rss_hat
+
+    @functools.lru_cache(maxsize=None)
+    def _jax_fit(mode: str):
+        vmapped = jax.vmap(functools.partial(_fit_single_jax, mode=mode),
+                           in_axes=(0, 0, 0, None, None, None))
+        return jax.jit(vmapped, static_argnums=(5,))
+
+    def _fit_cells_jax(n, y, mask, f_grid, utilization, p0_factor):
+        n_max = int(n.max()) if n.size else 0
+        fitter = _jax_fit(utilization)
+        with jax.experimental.enable_x64():
+            out = fitter(jnp.asarray(n, jnp.float64),
+                         jnp.asarray(y, jnp.float64),
+                         jnp.asarray(mask),
+                         jnp.asarray(f_grid, jnp.float64),
+                         jnp.float64(p0_factor), n_max)
+        return tuple(np.asarray(x) for x in out)
+
+
+def fit_scaling(traces: TraceSet | Sequence[ScalingTrace], *,
+                utilization: str = "queue",
+                f_grid: np.ndarray | None = None, p0_factor: float = 0.5,
+                backend: str = "auto") -> ScalingFit:
+    """Fit ``(f, b_s)`` for every scaling trace in one batched pass.
+
+    ``utilization`` must match the instrument that produced the traces:
+    ``"queue"`` for memsim-generated curves (and idealized interfaces),
+    ``"recursion"`` for real-hardware measurements with a soft knee.
+    ``backend``: ``"numpy"``, ``"jax"`` (vmapped + jitted), or ``"auto"``.
+    """
+    if not isinstance(traces, TraceSet):
+        traces = TraceSet(scaling=tuple(traces))
+    if not traces.scaling:
+        return ScalingFit(f=np.zeros(0), bs=np.zeros(0), rss=np.zeros(0),
+                          traces=(), utilization=utilization,
+                          backend=backend)
+    if utilization not in ("queue", "recursion"):
+        raise ValueError(f"unknown utilization mode {utilization!r}")
+    f_grid = DEFAULT_F_GRID if f_grid is None else np.asarray(f_grid)
+    n, y, mask, tr = traces.to_arrays()
+    if backend == "auto":
+        backend = "jax" if HAVE_JAX else "numpy"
+    if backend == "jax":
+        if not HAVE_JAX:
+            raise RuntimeError("backend='jax' requested but jax is not "
+                               "importable")
+        f_hat, bs_hat, rss = _fit_cells_jax(n, y, mask, f_grid,
+                                            utilization, p0_factor)
+    elif backend == "numpy":
+        f_hat, bs_hat, rss = _fit_cells_np(n, y, mask, f_grid,
+                                           utilization, p0_factor)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return ScalingFit(f=f_hat, bs=bs_hat, rss=rss, traces=tuple(tr),
+                      utilization=utilization, backend=backend)
+
+
+def fit_scaling_cell(trace: ScalingTrace, **kwargs) -> tuple[float, float]:
+    """Scalar convenience: fit one trace, return ``(f, b_s)``.  The
+    sequential per-cell baseline the benchmark compares the batched pass
+    against is a Python loop over this function."""
+    fit = fit_scaling([trace], **kwargs)
+    return float(fit.f[0]), float(fit.bs[0])
+
+
+# ---------------------------------------------------------------------------
+# Seed-ensemble aggregation → calibrated specs
+# ---------------------------------------------------------------------------
+
+
+def aggregate_ensemble(fit: ScalingFit, *, ci: float = 0.9
+                       ) -> dict[tuple[str, str],
+                                 dict[str, CalibratedValue]]:
+    """Collapse a seed ensemble into per-(kernel, arch) estimates.
+
+    Returns ``{(kernel, arch): {"f": CalibratedValue,
+    "bs": CalibratedValue}}`` with the median as the point estimate and
+    the central ``ci`` percentile interval over seeds as the confidence
+    band (degenerate — lo == hi == value — for single-seed cells).
+    """
+    lo_q, hi_q = 50 * (1 - ci), 50 * (1 + ci)
+    out: dict[tuple[str, str], dict[str, CalibratedValue]] = {}
+    for key, idx in fit.cells().items():
+        cell: dict[str, CalibratedValue] = {}
+        for field, arr in (("f", fit.f), ("bs", fit.bs)):
+            vals = arr[idx]
+            cell[field] = CalibratedValue(
+                value=float(np.median(vals)),
+                lo=float(np.percentile(vals, lo_q)),
+                hi=float(np.percentile(vals, hi_q)),
+                n_seeds=len(idx))
+        out[key] = cell
+    return out
+
+
+def calibrated_specs(fit: ScalingFit, *,
+                     templates: Mapping[str, KernelSpec] | None = None,
+                     ci: float = 0.9) -> dict[str, KernelSpec]:
+    """Materialize a fit as first-class :class:`KernelSpec` objects.
+
+    Each kernel present in the fit gets one spec whose ``f``/``bs``
+    mappings cover every fitted architecture (ensemble medians).  When a
+    ``templates`` mapping (default: Table II) has a spec of the same
+    name, its stream decomposition is inherited via
+    :meth:`KernelSpec.from_calibration`, so ECM prediction and the
+    desync engines consume the calibrated spec unchanged.
+    """
+    templates = TABLE2 if templates is None else templates
+    agg = aggregate_ensemble(fit, ci=ci)
+    per_kernel: dict[str, tuple[dict, dict]] = {}
+    for (kern, arch), cell in sorted(agg.items()):
+        f_map, bs_map = per_kernel.setdefault(kern, ({}, {}))
+        f_map[arch] = min(cell["f"].value, 1.0)
+        bs_map[arch] = cell["bs"].value
+    return {
+        kern: KernelSpec.from_calibration(
+            kern, f_map, bs_map, template=templates.get(kern))
+        for kern, (f_map, bs_map) in per_kernel.items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Saturation-envelope fit from paired measurements (Eq. 4 in reverse)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvelopeFit:
+    """Per-arch least-squares solution of Eq. 4 from paired totals:
+    ``bs[arch][kernel]`` is the kernel's inferred homogeneous saturated
+    bandwidth; any mix's envelope follows as the thread-weighted mean."""
+
+    bs: dict[str, dict[str, float]]
+    residual: dict[str, float]     # RMS of (measured − fitted) totals
+
+    def envelope(self, arch: str, groups: Sequence[tuple[str, int]]
+                 ) -> float:
+        """Eq. 4 for an arbitrary mix ``[(kernel, n), ...]`` on ``arch``."""
+        n_tot = sum(n for _, n in groups)
+        if n_tot == 0:
+            return 0.0
+        return sum(n * self.bs[arch][k] for k, n in groups) / n_tot
+
+
+def fit_envelope(pairs: Sequence[PairTrace]) -> EnvelopeFit:
+    """Recover per-kernel ``b_s`` from saturated paired totals.
+
+    Eq. 4 makes the mix envelope *linear* in the per-kernel saturated
+    bandwidths: ``b_total = Σ (n_i / n_tot) · b_s,i``.  Stacking every
+    pair trace of an architecture gives an overdetermined linear system,
+    solved here per arch via ridge-stabilized normal equations — all
+    architectures in one batched ``np.linalg.solve`` call.
+    """
+    pairs = tuple(pairs)
+    if not pairs:
+        return EnvelopeFit(bs={}, residual={})
+    archs = sorted({p.arch for p in pairs})
+    kernels = sorted({k for p in pairs for k in p.kernels})
+    a_idx = {a: i for i, a in enumerate(archs)}
+    k_idx = {k: i for i, k in enumerate(kernels)}
+    A, K = len(archs), len(kernels)
+    gram = np.zeros((A, K, K))
+    rhs = np.zeros((A, K))
+    rows: dict[str, list[tuple[np.ndarray, float]]] = {a: [] for a in archs}
+    for p in pairs:
+        row = np.zeros(K)
+        n_tot = sum(p.n)
+        for k, n in zip(p.kernels, p.n):
+            row[k_idx[k]] += n / n_tot
+        y = sum(p.bandwidth)
+        ai = a_idx[p.arch]
+        gram[ai] += np.outer(row, row)
+        rhs[ai] += row * y
+        rows[p.arch].append((row, y))
+    # Tiny ridge keeps uncovered kernels solvable; they come out ~0 and
+    # are reported as NaN below.
+    ridge = 1e-9 * np.maximum(np.trace(gram, axis1=1, axis2=2), 1.0) / K
+    gram += ridge[:, None, None] * np.eye(K)[None]
+    sol = np.linalg.solve(gram, rhs[..., None])[..., 0]      # (A, K)
+    covered = np.zeros((A, K), dtype=bool)
+    for p in pairs:
+        for k in p.kernels:
+            covered[a_idx[p.arch], k_idx[k]] = True
+    bs = {a: {k: (float(sol[a_idx[a], k_idx[k]])
+                  if covered[a_idx[a], k_idx[k]] else float("nan"))
+              for k in kernels}
+          for a in archs}
+    residual = {}
+    for a in archs:
+        errs = [y - float(row @ sol[a_idx[a]]) for row, y in rows[a]]
+        residual[a] = float(np.sqrt(np.mean(np.square(errs))))
+    return EnvelopeFit(bs=bs, residual=residual)
+
+
+# ---------------------------------------------------------------------------
+# Paired-share prediction from calibrated specs (one batched solve)
+# ---------------------------------------------------------------------------
+
+
+def predict_pairs(specs: Mapping[str, KernelSpec],
+                  pairs: Sequence[PairTrace], *,
+                  utilization: str | float = "queue") -> np.ndarray:
+    """Model-predicted per-group bandwidths for every pair trace, solved
+    in **one** :func:`repro.core.sharing.solve_batch` call (the PR-2
+    batch machinery).  Returns ``(len(pairs), 2)`` GB/s."""
+    pairs = tuple(pairs)
+    if not pairs:
+        return np.zeros((0, 2))
+    n = np.array([p.n for p in pairs], dtype=np.float64)
+    f = np.array([[specs[k].f[p.arch] for k in p.kernels] for p in pairs])
+    bs = np.array([[specs[k].bs[p.arch] for k in p.kernels]
+                   for p in pairs])
+    batch = solve_batch(n, f, bs, utilization=utilization)
+    return batch.bw_group

@@ -1,0 +1,287 @@
+"""Versioned trace schema: the measurement side of the measure→model loop.
+
+The paper's only model inputs — the memory request fraction ``f`` and the
+saturated bandwidth ``b_s`` per kernel — "can either be measured directly
+or predicted using the ECM model".  This module defines the *measured*
+route's data format: bandwidth-vs-active-cores scaling curves
+(:class:`ScalingTrace`) and paired-kernel share measurements
+(:class:`PairTrace`), serialized as JSON or ndjson under an explicit
+``schema`` version so traces recorded today keep loading tomorrow.
+
+Users with real hardware record traces with LIKWID/perf and feed them to
+:mod:`repro.calibrate.fit`; the hermetic container has no multicore x86,
+so the microscopic queue simulator (:mod:`repro.core.memsim`) doubles as
+the built-in synthetic trace generator (:func:`synthesize_scaling_trace`,
+:func:`synthesize_pair_trace`) — which is also what lets the round-trip
+certification (:mod:`repro.calibrate.certify`) exercise the full pipeline
+end to end with a known ground truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from ..core import memsim
+from ..core.machine import X86_MACHINES
+from ..core.sharing import Group
+from ..core.table2 import TABLE2, KernelSpec
+
+SCHEMA_VERSION = 1
+
+#: Contention-domain sizes (paper Table I) — the default scaling range.
+DOMAIN_CORES = {name: m.cores_per_domain for name, m in X86_MACHINES.items()}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalingTrace:
+    """One homogeneous bandwidth-vs-active-cores curve.
+
+    ``bandwidth[i]`` is the *aggregate* attained bandwidth [GB/s] with
+    ``cores[i]`` active cores all running ``kernel`` on one contention
+    domain of ``arch`` — the paper's Fig. 2-style saturation curve, and
+    the input from which :mod:`repro.calibrate.fit` recovers ``(f, b_s)``.
+    """
+
+    kernel: str
+    arch: str
+    cores: tuple[int, ...]
+    bandwidth: tuple[float, ...]
+    seed: int | None = None       # generator / measurement-noise seed
+    noise: float = 0.0            # relative sigma of applied noise
+    source: str = "measured"      # "measured" | "memsim"
+
+    def __post_init__(self):
+        if len(self.cores) != len(self.bandwidth):
+            raise ValueError(
+                f"{self.kernel}/{self.arch}: {len(self.cores)} core counts "
+                f"vs {len(self.bandwidth)} bandwidth samples")
+        if not self.cores:
+            raise ValueError(f"{self.kernel}/{self.arch}: empty trace")
+        if any(c <= 0 for c in self.cores):
+            raise ValueError(f"{self.kernel}/{self.arch}: core counts must "
+                             f"be positive, got {self.cores}")
+        if list(self.cores) != sorted(set(self.cores)):
+            raise ValueError(f"{self.kernel}/{self.arch}: core counts must "
+                             f"be strictly ascending, got {self.cores}")
+        if any(b <= 0 for b in self.bandwidth):
+            raise ValueError(f"{self.kernel}/{self.arch}: bandwidths must "
+                             f"be positive, got {self.bandwidth}")
+
+    def to_json_dict(self) -> dict:
+        return {"schema": SCHEMA_VERSION, "kind": "scaling",
+                "kernel": self.kernel, "arch": self.arch,
+                "cores": list(self.cores),
+                "bandwidth": list(self.bandwidth), "seed": self.seed,
+                "noise": self.noise, "source": self.source}
+
+
+@dataclasses.dataclass(frozen=True)
+class PairTrace:
+    """One paired-kernel share measurement (the paper's Fig. 6/8 points):
+    group A runs ``kernels[0]`` on ``n[0]`` cores while group B runs
+    ``kernels[1]`` on ``n[1]`` cores of the same domain; ``bandwidth``
+    holds each group's attained aggregate [GB/s]."""
+
+    kernels: tuple[str, str]
+    arch: str
+    n: tuple[int, int]
+    bandwidth: tuple[float, float]
+    seed: int | None = None
+    source: str = "measured"
+
+    def __post_init__(self):
+        for field, want in (("kernels", 2), ("n", 2), ("bandwidth", 2)):
+            if len(getattr(self, field)) != want:
+                raise ValueError(f"pair trace {field} must have exactly "
+                                 f"{want} entries")
+        if any(x <= 0 for x in self.n):
+            raise ValueError(f"pair trace core counts must be positive, "
+                             f"got {self.n}")
+
+    def to_json_dict(self) -> dict:
+        return {"schema": SCHEMA_VERSION, "kind": "pair",
+                "kernels": list(self.kernels), "arch": self.arch,
+                "n": list(self.n), "bandwidth": list(self.bandwidth),
+                "seed": self.seed, "source": self.source}
+
+
+def _trace_from_dict(d: dict) -> ScalingTrace | PairTrace:
+    schema = d.get("schema")
+    if schema != SCHEMA_VERSION:
+        raise ValueError(
+            f"unsupported trace schema {schema!r} (this reader understands "
+            f"schema {SCHEMA_VERSION}); regenerate or convert the trace")
+    kind = d.get("kind")
+    if kind == "scaling":
+        return ScalingTrace(
+            kernel=d["kernel"], arch=d["arch"], cores=tuple(d["cores"]),
+            bandwidth=tuple(d["bandwidth"]), seed=d.get("seed"),
+            noise=d.get("noise", 0.0), source=d.get("source", "measured"))
+    if kind == "pair":
+        return PairTrace(
+            kernels=tuple(d["kernels"]), arch=d["arch"], n=tuple(d["n"]),
+            bandwidth=tuple(d["bandwidth"]), seed=d.get("seed"),
+            source=d.get("source", "measured"))
+    raise ValueError(f"unknown trace kind {kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSet:
+    """A loaded collection of traces, split by kind."""
+
+    scaling: tuple[ScalingTrace, ...] = ()
+    pairs: tuple[PairTrace, ...] = ()
+
+    def __len__(self) -> int:
+        return len(self.scaling) + len(self.pairs)
+
+    def to_arrays(self) -> tuple[np.ndarray, np.ndarray, np.ndarray, list]:
+        """Pack the scaling traces into padded cell arrays for the batched
+        fit: ``(cores (C, N), bandwidth (C, N), mask (C, N), traces)``.
+        Cell c is ``self.scaling[c]``; padding entries have ``mask``
+        False and ``cores = 0``."""
+        C = len(self.scaling)
+        N = max((len(t.cores) for t in self.scaling), default=0)
+        n = np.zeros((C, max(N, 1)))
+        y = np.zeros((C, max(N, 1)))
+        mask = np.zeros((C, max(N, 1)), dtype=bool)
+        for c, tr in enumerate(self.scaling):
+            k = len(tr.cores)
+            n[c, :k] = tr.cores
+            y[c, :k] = tr.bandwidth
+            mask[c, :k] = True
+        return n, y, mask, list(self.scaling)
+
+
+def dump_traces(traces: Iterable[ScalingTrace | PairTrace],
+                path: str | pathlib.Path, *, ndjson: bool = False) -> None:
+    """Write traces as a schema-versioned JSON file (or ndjson when asked:
+    one trace object per line, append-friendly for long measurement
+    campaigns)."""
+    path = pathlib.Path(path)
+    dicts = [t.to_json_dict() for t in traces]
+    if ndjson:
+        path.write_text("".join(json.dumps(d) + "\n" for d in dicts))
+    else:
+        path.write_text(json.dumps(
+            {"schema": SCHEMA_VERSION, "traces": dicts}, indent=2))
+
+
+def load_traces(path: str | pathlib.Path) -> TraceSet:
+    """Load a JSON or ndjson trace file into a :class:`TraceSet`.
+
+    The format is sniffed from the content: a JSON object with a
+    ``traces`` list, a bare JSON list, or newline-delimited JSON objects.
+    Every record must carry ``schema == 1``.
+    """
+    text = pathlib.Path(path).read_text()
+    stripped = text.lstrip()
+    if stripped.startswith("{") or stripped.startswith("["):
+        try:
+            doc = json.loads(text)
+        except json.JSONDecodeError:
+            doc = None
+        if isinstance(doc, list):
+            dicts = doc
+        elif isinstance(doc, dict) and "traces" in doc:
+            # The wrapper's schema declaration covers records that do not
+            # repeat it per-record.
+            dicts = [{"schema": doc.get("schema"), **d}
+                     for d in doc["traces"]]
+        elif isinstance(doc, dict):
+            dicts = [doc]       # single-record ndjson file
+        else:                   # "{...}\n{...}" ndjson of objects
+            dicts = [json.loads(line) for line in text.splitlines()
+                     if line.strip()]
+    else:
+        raise ValueError(f"{path}: not a JSON/ndjson trace file")
+    scaling, pairs = [], []
+    for d in dicts:
+        tr = _trace_from_dict(d)
+        (scaling if isinstance(tr, ScalingTrace) else pairs).append(tr)
+    return TraceSet(scaling=tuple(scaling), pairs=tuple(pairs))
+
+
+# ---------------------------------------------------------------------------
+# Built-in synthetic generator: the queue simulator plays LIKWID.
+# ---------------------------------------------------------------------------
+
+
+def _resolve(kernel: str | KernelSpec,
+             specs: dict[str, KernelSpec] | None) -> KernelSpec:
+    if isinstance(kernel, KernelSpec):
+        return kernel
+    return (specs or TABLE2)[kernel]
+
+
+def synthesize_scaling_trace(kernel: str | KernelSpec, arch: str, *,
+                             n_max: int | None = None,
+                             seed: int | None = None, noise: float = 0.0,
+                             n_events: int = 20_000,
+                             specs: dict[str, KernelSpec] | None = None
+                             ) -> ScalingTrace:
+    """Generate one homogeneous scaling curve with the queue simulator.
+
+    Runs ``memsim`` with ``n = 1..n_max`` cores of ``kernel`` (default
+    ``n_max``: the architecture's contention-domain size) and, when
+    ``noise > 0``, multiplies each sample by seeded lognormal-ish
+    ``1 + N(0, noise)`` measurement scatter.  ``seed`` drives both the
+    simulator's phase jitter and the noise draw, so identical seeds give
+    identical traces (tested) and a seed ensemble gives the scatter the
+    fit's confidence intervals average over.
+    """
+    spec = _resolve(kernel, specs)
+    if n_max is None:
+        n_max = DOMAIN_CORES[arch]
+    rng = np.random.default_rng(seed)
+    cores = tuple(range(1, n_max + 1))
+    bw = []
+    for n in cores:
+        sim_seed = None if seed is None else int(rng.integers(2**31))
+        res = memsim.simulate_result([Group.of(spec, arch, n)],
+                                     seed=sim_seed, n_events=n_events)
+        bw.append(res.bw[0])
+    if noise > 0.0:
+        factors = np.maximum(1.0 + noise * rng.standard_normal(len(bw)),
+                             0.05)
+        bw = [b * float(c) for b, c in zip(bw, factors)]
+    return ScalingTrace(kernel=spec.name, arch=arch, cores=cores,
+                        bandwidth=tuple(bw), seed=seed, noise=noise,
+                        source="memsim")
+
+
+def synthesize_pair_trace(kernel_a: str | KernelSpec,
+                          kernel_b: str | KernelSpec, arch: str,
+                          n_a: int, n_b: int, *, seed: int | None = None,
+                          n_events: int = 20_000,
+                          specs: dict[str, KernelSpec] | None = None
+                          ) -> PairTrace:
+    """Generate one paired-share measurement with the queue simulator —
+    the held-out data the certification predicts from fitted specs."""
+    a, b = _resolve(kernel_a, specs), _resolve(kernel_b, specs)
+    res = memsim.simulate_result(
+        [Group.of(a, arch, n_a), Group.of(b, arch, n_b)],
+        seed=seed, n_events=n_events)
+    return PairTrace(kernels=(a.name, b.name), arch=arch, n=(n_a, n_b),
+                     bandwidth=(res.bw[0], res.bw[1]), seed=seed,
+                     source="memsim")
+
+
+def synthesize_ensemble(kernels: Sequence[str | KernelSpec],
+                        archs: Sequence[str], seeds: Sequence[int], *,
+                        n_max: int | None = None, noise: float = 0.02,
+                        n_events: int = 20_000,
+                        specs: dict[str, KernelSpec] | None = None
+                        ) -> TraceSet:
+    """The full (kernel × arch × seed) scaling-trace grid — one cell per
+    trace, ready for the single-pass batched fit."""
+    out = [synthesize_scaling_trace(k, arch, n_max=n_max, seed=s,
+                                    noise=noise, n_events=n_events,
+                                    specs=specs)
+           for k in kernels for arch in archs for s in seeds]
+    return TraceSet(scaling=tuple(out))

@@ -146,20 +146,24 @@ class DesyncSimulator:
                   specs: dict[str, KernelSpec] | None = None, *,
                   topology: Topology | None = None,
                   placement: Sequence[str] | None = None,
-                  t_max: float = 10.0, backend: str = "numpy"):
+                  t_max: float = 10.0, backend: str = "numpy",
+                  on_deadlock: str = "mask"):
         """Run B independent scenarios in one batched simulation.
 
         ``programs_batch`` is a B-long sequence of scenarios, each an R-long
         sequence of per-rank programs (same R across scenarios; topology and
         placement are shared).  Returns a
         :class:`repro.core.desync_batch.BatchRunResult`; with B = 1 the
-        records reproduce :meth:`run` exactly.  See
+        records reproduce :meth:`run` exactly.  A deadlocked scenario is
+        masked in :attr:`BatchRunResult.failed` by default
+        (``on_deadlock="raise"`` aborts instead, like :meth:`run`).  See
         :mod:`repro.core.desync_batch` for the engine.
         """
         from .desync_batch import run_batch as _run_batch
         return _run_batch(programs_batch, arch, specs,
                           topology=topology, placement=placement,
-                          t_max=t_max, backend=backend)
+                          t_max=t_max, backend=backend,
+                          on_deadlock=on_deadlock)
 
     def run(self, *, t_max: float = 10.0) -> list[Record]:
         ranks = [_RankState(program=p) for p in self.programs]

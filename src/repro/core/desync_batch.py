@@ -139,10 +139,19 @@ class BatchRunResult:
     t_end: np.ndarray     # (B,) final per-scenario clocks
     n_steps: int          # event-loop iterations executed
     backend: str
+    #: Per-scenario deadlock mask (``on_deadlock="mask"``): ``failed[b]``
+    #: is True when scenario b deadlocked; its records stop at the
+    #: deadlock point while every other scenario ran to completion.
+    failed: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, dtype=bool))
 
     @property
     def n_scenarios(self) -> int:
         return len(self.records)
+
+    @property
+    def n_failed(self) -> int:
+        return int(self.failed.sum())
 
     @property
     def n_ranks(self) -> int:
@@ -153,19 +162,33 @@ class BatchRunResult:
         """Total retirements across the batch (the benchmark's 'events')."""
         return sum(len(rs) for rs in self.records)
 
-    def durations_by_tag(self, b: int, tag: str, *,
-                         missing: float = 0.0) -> list[float]:
+    def _is_failed(self, b: int) -> bool:
+        return bool(self.failed[b]) if b < self.failed.size else False
+
+    def durations_by_tag(self, b: int, tag: str, *, missing: float = 0.0,
+                         allow_failed: bool = False) -> list[float]:
         """Per-rank accumulated ``tag`` time in scenario ``b`` (all R ranks,
-        never silently truncated)."""
+        never silently truncated).  A deadlocked scenario's records stop
+        at the deadlock point, so aggregating them would silently skew
+        downstream statistics — asking for one raises unless
+        ``allow_failed=True``."""
+        if self._is_failed(b) and not allow_failed:
+            raise ValueError(
+                f"scenario {b} deadlocked (see BatchRunResult.failed); "
+                f"its records are partial — pass allow_failed=True to "
+                f"aggregate them anyway")
         return durations_by_tag(self.records[b], tag,
                                 n_ranks=self.n_ranks, missing=missing)
 
     def skew_by_tag(self, tag: str) -> np.ndarray:
         """Fisher skewness of per-rank accumulated ``tag`` time, one entry
         per scenario — the paper's desync/resync indicator over the whole
-        ensemble."""
-        return np.array([skewness(self.durations_by_tag(b, tag))
-                         for b in range(self.n_scenarios)])
+        ensemble.  Deadlocked scenarios yield NaN (their records are
+        partial), so they cannot silently bias an ensemble mean."""
+        return np.array([
+            float("nan") if self._is_failed(b)
+            else skewness(self.durations_by_tag(b, tag))
+            for b in range(self.n_scenarios)])
 
 
 # --------------------------------------------------------------------------
@@ -177,8 +200,8 @@ def run_batch(programs_batch: Sequence[Sequence[Sequence[Item]]], arch: str,
               specs: dict[str, KernelSpec] | None = None, *,
               topology: Topology | None = None,
               placement: Sequence[str] | None = None,
-              t_max: float = 10.0, backend: str = "numpy"
-              ) -> BatchRunResult:
+              t_max: float = 10.0, backend: str = "numpy",
+              on_deadlock: str = "mask") -> BatchRunResult:
     """Simulate B scenarios of R ranks each in one batched run.
 
     Arguments mirror :class:`repro.core.desync.DesyncSimulator` plus the
@@ -190,15 +213,25 @@ def run_batch(programs_batch: Sequence[Sequence[Sequence[Item]]], arch: str,
 
     ``backend="numpy"`` (default) is the reference batched engine;
     ``"jax"`` lowers the event loop to a jitted ``lax.while_loop``.
-    A deadlocked scenario raises :class:`RuntimeError`, as in the scalar
-    engine.
+
+    ``on_deadlock`` controls what a deadlocked scenario does to the rest
+    of the batch: ``"mask"`` (default) freezes only the deadlocked
+    scenario — its records stop at the deadlock point and its entry in
+    :attr:`BatchRunResult.failed` is set — while every other scenario
+    runs to completion; ``"raise"`` aborts the whole run with
+    :class:`RuntimeError`, like the scalar engine (callers whose
+    downstream statistics would be silently skewed by a missing scenario
+    opt into this).
     """
+    if on_deadlock not in ("mask", "raise"):
+        raise ValueError(f"unknown on_deadlock mode {on_deadlock!r}")
     specs = dict(TABLE2 if specs is None else specs)
     programs_batch = [list(sc) for sc in programs_batch]
     if not programs_batch:
         return BatchRunResult(records=[], start=np.zeros((0, 0, 1)),
                               end=np.zeros((0, 0, 1)), t_end=np.zeros(0),
-                              n_steps=0, backend=backend)
+                              n_steps=0, backend=backend,
+                              failed=np.zeros(0, dtype=bool))
     n_ranks = len(programs_batch[0])
     for b, sc in enumerate(programs_batch):
         if len(sc) != n_ranks:
@@ -218,12 +251,12 @@ def run_batch(programs_batch: Sequence[Sequence[Sequence[Item]]], arch: str,
                  else ("domain0",) * n_ranks)
     enc = _encode(programs_batch, specs)
     if backend == "numpy":
-        return _run_numpy(enc, arch, specs, placement, t_max)
+        return _run_numpy(enc, arch, specs, placement, t_max, on_deadlock)
     if backend == "jax":
         if not HAVE_JAX:
             raise RuntimeError("backend='jax' requested but jax is not "
                                "importable")
-        return _run_jax(enc, arch, specs, placement, t_max)
+        return _run_jax(enc, arch, specs, placement, t_max, on_deadlock)
     raise ValueError(f"unknown backend {backend!r}")
 
 
@@ -248,8 +281,8 @@ def _domain_order(placement: Sequence[str]) -> np.ndarray:
     return np.array([dom_idx[p] for p in placement], dtype=np.int64)
 
 
-def _run_numpy(enc: _Encoded, arch: str, specs, placement, t_max: float
-               ) -> BatchRunResult:
+def _run_numpy(enc: _Encoded, arch: str, specs, placement, t_max: float,
+               on_deadlock: str = "mask") -> BatchRunResult:
     B, R, L = enc.kind.shape
     K = len(enc.kernels)
     f_vec, bs_vec = _arch_vectors(enc.kernels, specs, arch)
@@ -263,6 +296,7 @@ def _run_numpy(enc: _Encoded, arch: str, specs, placement, t_max: float
     blocked = np.zeros((B, R), dtype=bool)
     releasing = np.zeros((B, R), dtype=bool)
     t = np.zeros(B)
+    dead = np.zeros(B, dtype=bool)
     start_arr = np.full((B, R, L), np.nan)
     end_arr = np.full((B, R, L), np.nan)
     records: list[list[Record]] = [[] for _ in range(B)]
@@ -304,7 +338,7 @@ def _run_numpy(enc: _Encoded, arch: str, specs, placement, t_max: float
     ready = np.where(begin & (k0 == _IDLE), q0, ready)
     blocked = begin & ((k0 == _ALLREDUCE) | (k0 == _WAITNB))
 
-    active = (t < t_max) & ~done.all(axis=1)
+    active = (t < t_max) & ~done.all(axis=1) & ~dead
 
     while active.any():
         n_steps += 1
@@ -326,7 +360,7 @@ def _run_numpy(enc: _Encoded, arch: str, specs, placement, t_max: float
         prog = active & ~resolve
         if not prog.any():
             done = pc >= enc.plen
-            active = (t < t_max) & ~done.all(axis=1)
+            active = (t < t_max) & ~done.all(axis=1) & ~dead
             continue
 
         # -- satisfied neighbor waits start draining their p2p cost
@@ -377,10 +411,13 @@ def _run_numpy(enc: _Encoded, arch: str, specs, placement, t_max: float
         dt = cand.min(axis=1) if R else np.full(B, np.inf)
         stuck = prog & ~np.isfinite(dt)
         if stuck.any():
-            b = int(np.nonzero(stuck)[0][0])
-            raise RuntimeError(
-                f"desync simulator deadlock at t={t[b]:.6f}s "
-                f"(scenario {b}): pcs={pc[b].tolist()}")
+            if on_deadlock == "raise":
+                b = int(np.nonzero(stuck)[0][0])
+                raise RuntimeError(
+                    f"desync simulator deadlock at t={t[b]:.6f}s "
+                    f"(scenario {b}): pcs={pc[b].tolist()}")
+            dead |= stuck       # freeze only the deadlocked scenarios
+            prog &= ~stuck
         dt = np.where(prog, np.maximum(dt, EPS), 0.0)
         t = np.where(prog, t + dt, t)
 
@@ -394,10 +431,11 @@ def _run_numpy(enc: _Encoded, arch: str, specs, placement, t_max: float
             finish(int(b), int(r), t[b])
 
         done = pc >= enc.plen
-        active = (t < t_max) & ~done.all(axis=1)
+        active = (t < t_max) & ~done.all(axis=1) & ~dead
 
     return BatchRunResult(records=records, start=start_arr, end=end_arr,
-                          t_end=t, n_steps=n_steps, backend="numpy")
+                          t_end=t, n_steps=n_steps, backend="numpy",
+                          failed=dead)
 
 
 # --------------------------------------------------------------------------
@@ -426,8 +464,8 @@ def _records_from_arrays(enc: _Encoded, start_arr: np.ndarray,
     return records
 
 
-def _run_jax(enc: _Encoded, arch: str, specs, placement, t_max: float
-             ) -> BatchRunResult:
+def _run_jax(enc: _Encoded, arch: str, specs, placement, t_max: float,
+             on_deadlock: str = "mask") -> BatchRunResult:
     import jax
     import jax.numpy as jnp
     from jax import lax
@@ -596,12 +634,13 @@ def _run_jax(enc: _Encoded, arch: str, specs, placement, t_max: float
         (t, pc, _, _, _, _, _, start_a, end_a, steps, dead) = \
             tuple(np.asarray(x) for x in out)
 
-    if dead.any():
+    if dead.any() and on_deadlock == "raise":
         b = int(np.nonzero(dead)[0][0])
         raise RuntimeError(
             f"desync simulator deadlock at t={t[b]:.6f}s "
             f"(scenario {b}): pcs={pc[b].tolist()}")
-    still_active = (t < t_max) & ~(pc >= np.asarray(enc.plen)).all(axis=1)
+    still_active = (t < t_max) & ~dead \
+        & ~(pc >= np.asarray(enc.plen)).all(axis=1)
     if still_active.any():
         b = int(np.nonzero(still_active)[0][0])
         raise RuntimeError(
@@ -612,4 +651,4 @@ def _run_jax(enc: _Encoded, arch: str, specs, placement, t_max: float
     return BatchRunResult(
         records=_records_from_arrays(enc, start_a, end_a),
         start=start_a, end=end_a, t_end=t, n_steps=int(steps),
-        backend="jax")
+        backend="jax", failed=dead)

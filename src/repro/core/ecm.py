@@ -114,12 +114,21 @@ def scaling_curve(f: float, t_mem: float, t_ecm: float, n_max: int,
     return u
 
 
-def bandwidth_vs_cores(kernel: KernelSpec, arch: str, n_max: int
-                       ) -> list[float]:
+def bandwidth_vs_cores(kernel: KernelSpec, arch: str, n_max: int, *,
+                       utilization: str = "recursion") -> list[float]:
     """Predicted aggregate bandwidth (GB/s) at 1..n_max cores, from the
-    measured ``(f, b_s)`` pair — the paper's phenomenological route."""
+    measured ``(f, b_s)`` pair — the paper's phenomenological route.
+
+    ``utilization`` selects the sub-saturation law (see
+    :func:`repro.core.sharing.utilization_curve`): ``"recursion"`` (the
+    default, this module's :func:`scaling_curve`) or ``"queue"`` (the hard
+    knee of the queue instrument).  The same forward model, evaluated in
+    reverse, is what :mod:`repro.calibrate.fit` inverts to recover
+    ``(f, b_s)`` from a measured curve.
+    """
+    from .sharing import utilization_curve
     f, bs = kernel.f[arch], kernel.bs[arch]
-    # Reconstruct the time decomposition implied by (f, b_s): choose units
-    # where t_ecm = 1, hence t_mem = f.
-    u = scaling_curve(f, t_mem=f, t_ecm=1.0, n_max=n_max)
-    return [ui * bs for ui in u]
+    # In units where t_ecm = 1 (hence t_mem = f), the recursion mode is
+    # exactly :func:`scaling_curve` — one shared law for both routes.
+    u = utilization_curve(list(range(1, n_max + 1)), f, mode=utilization)
+    return [float(ui) * bs for ui in u]

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import random
 from collections import deque
 from typing import Sequence
 
@@ -52,18 +53,59 @@ class _Core:
     completed: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class SimResult:
+    """Outcome of one queue simulation, with its provenance.
+
+    ``seed`` records the phase-jitter RNG seed the run used (``None`` for
+    the deterministic stagger), so calibration ensembles built on the
+    simulator are reproducible from the result alone.
+    """
+
+    bw: tuple[float, ...]   # attained bandwidth per group [GB/s]
+    seed: int | None        # phase-jitter seed (None = deterministic)
+    events: int             # interface services counted after warmup
+    sim_time_s: float       # simulated span
+
+
 def simulate(groups: Sequence[Group], *, sim_time_s: float | None = None,
              q_max: int = 48, warmup_frac: float = 0.15,
-             n_events: int = 40_000) -> tuple[float, ...]:
+             n_events: int = 40_000, seed: int | None = None
+             ) -> tuple[float, ...]:
     """Run the queue simulation; return attained bandwidth per group [GB/s].
 
     ``sim_time_s=None`` sizes the window to ~``n_events`` interface services,
     which bounds Python event-loop cost while keeping sampling error ≪ 1 %.
+    ``seed`` randomizes the cores' initial request phases (see
+    :func:`simulate_result`); the default ``None`` keeps the historical
+    deterministic stagger bit-for-bit.
+    """
+    return simulate_result(groups, sim_time_s=sim_time_s, q_max=q_max,
+                           warmup_frac=warmup_frac, n_events=n_events,
+                           seed=seed).bw
+
+
+def simulate_result(groups: Sequence[Group], *,
+                    sim_time_s: float | None = None, q_max: int = 48,
+                    warmup_frac: float = 0.15, n_events: int = 40_000,
+                    seed: int | None = None) -> SimResult:
+    """:func:`simulate` returning a :class:`SimResult` with provenance.
+
+    With ``seed=None`` each core's first request is launched on the
+    deterministic stagger ``(ci+1)·gap/n_cores`` (the historical behavior,
+    reproduced exactly).  With an integer ``seed`` the initial phases are
+    drawn uniformly from ``[0, gap)`` by ``random.Random(seed)``: different
+    seeds explore different interleavings of the same steady state —
+    window discretization and queue-residence effects then vary by a few
+    percent, which is exactly the measurement-style scatter the
+    calibration ensembles (repro.calibrate) average over.  Identical
+    seeds give identical results.
     """
     groups = tuple(groups)
     b_mix = overlapped_saturated_bw(groups)
     if b_mix <= 0 or all(g.n == 0 for g in groups):
-        return tuple(0.0 for _ in groups)
+        return SimResult(bw=tuple(0.0 for _ in groups), seed=seed,
+                         events=0, sim_time_s=0.0)
     service_s = CACHELINE / (b_mix * 1e9)
     if sim_time_s is None:
         sim_time_s = n_events * service_s
@@ -79,8 +121,12 @@ def simulate(groups: Sequence[Group], *, sim_time_s: float | None = None,
 
     heap: list[tuple[float, int, int, int]] = []   # (t, seq, kind, core)
     seq = 0
+    rng = random.Random(seed) if seed is not None else None
     for ci, c in enumerate(cores):
-        t0 = (ci + 1) * c.gap_s / max(1, len(cores))
+        if rng is None:
+            t0 = (ci + 1) * c.gap_s / max(1, len(cores))
+        else:
+            t0 = rng.uniform(0.0, c.gap_s)
         heapq.heappush(heap, (t0, seq, _GEN, ci)); seq += 1
 
     queue: deque[int] = deque()
@@ -127,4 +173,6 @@ def simulate(groups: Sequence[Group], *, sim_time_s: float | None = None,
     bw = [0.0] * len(groups)
     for c in cores:
         bw[c.group] += c.completed * CACHELINE / window_s / 1e9
-    return tuple(bw)
+    return SimResult(bw=tuple(bw), seed=seed,
+                     events=sum(c.completed for c in cores),
+                     sim_time_s=sim_time_s)

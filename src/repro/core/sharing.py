@@ -172,6 +172,44 @@ def runtime(groups: Sequence[Group], work_bytes: Sequence[float]
 _TINY = 1e-300  # division guard far below any physical n·f product
 
 
+def utilization_curve(n, f, *, mode: str = "recursion",
+                      p0_factor: float = 0.5) -> np.ndarray:
+    """Sub-saturation interface utilization ``U(n; f)``, vectorized.
+
+    ``n`` and ``f`` broadcast against each other; entries with ``n == 0``
+    (or ``f == 0`` in recursion mode) return 1.0, matching the neutral
+    handling inside :func:`_solve_arrays_np`.  Modes:
+
+    * ``"queue"`` — ideal work-conserving interface, ``U = min(1, f·n)``
+      (the hard knee of the queue instrument, core/memsim.py);
+    * ``"recursion"`` — the simplified latency-penalty recursion of
+      Hofmann et al. with ``t_ecm = 1``, ``t_mem = f`` and penalty
+      ``p0 = p0_factor · f`` (the soft knee of real hardware, paper
+      Fig. 7; equivalent to :func:`repro.core.ecm.scaling_curve`).
+
+    This is the single implementation of the utilization law: the batched
+    solver evaluates it at each scenario's ``(n_tot, f̄)``, and the
+    calibration fit (repro.calibrate.fit) evaluates it over whole scaling
+    curves as the Eq. 1–5 forward model — so the two cannot drift.
+    """
+    n, f = np.broadcast_arrays(np.asarray(n, dtype=np.float64),
+                               np.asarray(f, dtype=np.float64))
+    active = n > 0
+    if mode == "queue":
+        return np.where(active, np.minimum(1.0, f * n), 1.0)
+    if mode == "recursion":
+        # Carry the recursion forward over core counts, freezing each
+        # entry at its own n via masking (entries differ in n, share f).
+        p0 = p0_factor * f
+        u = f.copy()
+        n_max = int(n.max()) if n.size else 0
+        for i in range(2, n_max + 1):
+            t_i = 1.0 + p0 * u * (i - 1)
+            u = np.where(i <= n, np.minimum(1.0, i * f / t_i), u)
+        return np.where(active & (f > 0), u, 1.0)
+    raise ValueError(f"unknown utilization mode {mode!r}")
+
+
 def _solve_arrays_np(n: np.ndarray, f: np.ndarray, bs: np.ndarray, *,
                      utilization: str | float, p0_factor: float,
                      saturated: bool | None
@@ -205,18 +243,9 @@ def _solve_arrays_np(n: np.ndarray, f: np.ndarray, bs: np.ndarray, *,
         util = np.ones_like(b)
     elif isinstance(utilization, (int, float)):
         util = np.where(active, float(utilization), 1.0)
-    elif utilization == "queue":
-        util = np.where(active, np.minimum(1.0, f_mean * n_tot), 1.0)
-    elif utilization == "recursion":
-        # Latency-penalty recursion (ecm.scaling_curve) with t_ecm = 1,
-        # t_mem = f_mean, evaluated at each scenario's own n_tot via masking.
-        p0 = p0_factor * f_mean
-        u = f_mean.copy()
-        n_max = int(n_tot.max()) if n_tot.size else 0
-        for i in range(2, n_max + 1):
-            t_i = 1.0 + p0 * u * (i - 1)
-            u = np.where(i <= n_tot, np.minimum(1.0, i * f_mean / t_i), u)
-        util = np.where(active & (f_mean > 0), u, 1.0)
+    elif utilization in ("queue", "recursion"):
+        util = utilization_curve(n_tot, f_mean, mode=utilization,
+                                 p0_factor=p0_factor)
     else:
         raise ValueError(f"unknown utilization mode {utilization!r}")
 
@@ -225,6 +254,28 @@ def _solve_arrays_np(n: np.ndarray, f: np.ndarray, bs: np.ndarray, *,
 
 
 if HAVE_JAX:
+
+    def utilization_curve_jax(n, f, *, mode: str, p0_factor, n_max: int):
+        """JAX twin of :func:`utilization_curve` (broadcasting inputs;
+        ``n_max`` is the static recursion bound, shared across a vmapped
+        batch).  The single jax implementation of the utilization law —
+        used by the batched solver below and by the calibration fit
+        (repro.calibrate.fit), so the two cannot drift."""
+        active = n > 0
+        if mode == "queue":
+            return jnp.where(active, jnp.minimum(1.0, f * n), 1.0)
+        if mode != "recursion":
+            raise ValueError(f"unknown utilization mode {mode!r}")
+        p0 = p0_factor * f
+        u0 = f + 0.0 * n   # broadcast of the u(1) = f seed
+
+        def body(i, u):
+            fi = i.astype(u.dtype)
+            t_i = 1.0 + p0 * u * (fi - 1.0)
+            return jnp.where(fi <= n, jnp.minimum(1.0, fi * f / t_i), u)
+
+        u = lax.fori_loop(2, n_max + 1, body, u0)
+        return jnp.where(active & (f > 0), u, 1.0)
 
     def _solve_single_jax(n, f, bs, p0_aux, n_max, *, mode: str):
         """One scenario (shape ``(G,)``); vmapped over the batch axis.
@@ -245,19 +296,9 @@ if HAVE_JAX:
             util = jnp.ones_like(b)
         elif mode == "fixed":
             util = jnp.where(active, p0_aux, 1.0)
-        elif mode == "queue":
-            util = jnp.where(active, jnp.minimum(1.0, f_mean * n_tot), 1.0)
-        else:  # recursion
-            p0 = p0_aux * f_mean
-
-            def body(i, u):
-                fi = i.astype(f_mean.dtype)
-                t_i = 1.0 + p0 * u * (fi - 1.0)
-                return jnp.where(fi <= n_tot,
-                                 jnp.minimum(1.0, fi * f_mean / t_i), u)
-
-            u = lax.fori_loop(2, n_max + 1, body, f_mean)
-            util = jnp.where(active & (f_mean > 0), u, 1.0)
+        else:  # queue / recursion: the shared utilization law
+            util = utilization_curve_jax(n_tot, f_mean, mode=mode,
+                                         p0_factor=p0_aux, n_max=n_max)
         bw = alphas * util * b
         return b, alphas, util, bw
 

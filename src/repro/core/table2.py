@@ -73,6 +73,45 @@ class KernelSpec:
         return cls(name=name, body="", reads=1, writes=0, rfo=0,
                    flops_per_iter=1, f={arch: f}, bs={arch: bs})
 
+    @classmethod
+    def from_calibration(cls, name: str, f: Mapping[str, float],
+                         bs: Mapping[str, float], *,
+                         template: "KernelSpec | None" = None
+                         ) -> "KernelSpec":
+        """Build a first-class spec from *calibrated* model inputs.
+
+        ``f``/``bs`` are per-architecture mappings recovered by
+        :mod:`repro.calibrate` from measured (or simulated) scaling
+        curves — the paper's "measured directly" route, closing the
+        measure→model loop.  When ``template`` names an existing spec
+        (e.g. the Table II row being re-derived), its stream
+        decomposition, body, and reference oracle are kept so ECM
+        prediction and the desync simulator work on the calibrated spec
+        unchanged; otherwise a minimal streaming decomposition is
+        assumed, as in :meth:`synthetic`.
+
+        Every value is validated against the model's admissible ranges
+        (``0 < f <= 1``, ``bs > 0``) — calibration noise must not smuggle
+        unphysical inputs into Eqs. 4–5.
+        """
+        f = dict(f)
+        bs = dict(bs)
+        if set(f) != set(bs):
+            raise ValueError(
+                f"architecture sets differ: f has {sorted(f)}, "
+                f"bs has {sorted(bs)}")
+        for arch in f:
+            if not 0.0 < f[arch] <= 1.0:
+                raise ValueError(
+                    f"calibrated f[{arch!r}] = {f[arch]} outside (0, 1]")
+            if not bs[arch] > 0.0:
+                raise ValueError(
+                    f"calibrated bs[{arch!r}] = {bs[arch]} must be > 0")
+        if template is not None:
+            return dataclasses.replace(template, name=name, f=f, bs=bs)
+        return cls(name=name, body="", reads=1, writes=0, rfo=0,
+                   flops_per_iter=1, f=f, bs=bs)
+
 
 def _spec(name, body, r, w, rfo, flops, f, bs, read_only=False) -> KernelSpec:
     return KernelSpec(

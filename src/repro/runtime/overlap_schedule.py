@@ -190,9 +190,11 @@ def evaluate_pod_plans(terms: RooflineTerms,
                                  tag="grad_drain"))
             progs.append(prog)
         programs_batch.append(progs)
+    # Plans are compared on t_step; a masked deadlocked candidate would
+    # win with a bogus short step, so abort loudly instead.
     res = DesyncSimulator.run_batch(
         programs_batch, "TPU", specs, topology=topo, placement=chips,
-        t_max=1e6, backend=backend)
+        t_max=1e6, backend=backend, on_deadlock="raise")
     out = []
     for b, load in enumerate(candidate_loads):
         recs = res.records[b]

@@ -98,7 +98,10 @@ class StragglerMonitor:
                          for ph in phases]
                 progs.append(prog)
             progs_batch.append(progs)
+        # A masked-out deadlocked draw would silently skew the ensemble
+        # skew statistic, so abort loudly instead.
         res = DesyncSimulator.run_batch(
             progs_batch, "TPU", specs, topology=topology,
-            placement=placement, t_max=120.0, backend=backend)
+            placement=placement, t_max=120.0, backend=backend,
+            on_deadlock="raise")
         return float(res.skew_by_tag(phases[probe].name).mean())

@@ -1,0 +1,335 @@
+"""Calibration subsystem: schema, batched fit, and spec integration.
+
+Fast tier-1 coverage; the full Table II × arch certification grid runs in
+the slow suite (tests/test_calibrate_roundtrip.py) and the CI round-trip
+job.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.calibrate import (PairTrace, ScalingTrace, TraceSet, certify,
+                             dump_traces, fit_envelope, fit_scaling,
+                             fit_scaling_cell, forward_bandwidth,
+                             load_traces, predict_pairs,
+                             synthesize_pair_trace,
+                             synthesize_scaling_trace)
+from repro.calibrate.fit import aggregate_ensemble, calibrated_specs
+from repro.core import memsim, sharing, table2
+from repro.core.sharing import HAVE_JAX, utilization_curve
+
+
+# ---------------------------------------------------------------------------
+# Trace schema
+# ---------------------------------------------------------------------------
+
+
+def _trace(**kw):
+    base = dict(kernel="DCOPY", arch="CLX", cores=(1, 2, 4),
+                bandwidth=(19.8, 39.6, 79.2))
+    base.update(kw)
+    return ScalingTrace(**base)
+
+
+def test_scaling_trace_validation():
+    with pytest.raises(ValueError, match="core counts"):
+        _trace(cores=(2, 1, 4))
+    with pytest.raises(ValueError, match="core counts"):
+        _trace(cores=(0, 1, 2))
+    with pytest.raises(ValueError, match="bandwidth samples"):
+        _trace(bandwidth=(1.0,))
+    with pytest.raises(ValueError, match="positive"):
+        _trace(bandwidth=(19.8, -1.0, 79.2))
+    with pytest.raises(ValueError, match="empty"):
+        _trace(cores=(), bandwidth=())
+
+
+def test_pair_trace_validation():
+    with pytest.raises(ValueError, match="exactly"):
+        PairTrace(kernels=("A",), arch="CLX", n=(1, 1),
+                  bandwidth=(1.0, 1.0))
+    with pytest.raises(ValueError, match="positive"):
+        PairTrace(kernels=("A", "B"), arch="CLX", n=(0, 1),
+                  bandwidth=(1.0, 1.0))
+
+
+@pytest.mark.parametrize("ndjson", [False, True], ids=["json", "ndjson"])
+def test_trace_round_trip_through_disk(tmp_path, ndjson):
+    traces = [
+        _trace(seed=3, noise=0.02, source="memsim"),
+        PairTrace(kernels=("DCOPY", "DDOT2"), arch="CLX", n=(12, 8),
+                  bandwidth=(59.1, 47.3), seed=5, source="memsim"),
+    ]
+    path = tmp_path / ("t.ndjson" if ndjson else "t.json")
+    dump_traces(traces, path, ndjson=ndjson)
+    ts = load_traces(path)
+    assert ts.scaling == (traces[0],)
+    assert ts.pairs == (traces[1],)
+    assert len(ts) == 2
+
+
+def test_single_record_ndjson_round_trip(tmp_path):
+    """Regression: an append-friendly campaign with exactly one trace so
+    far must load back (the one-line ndjson file parses as a bare JSON
+    object)."""
+    path = tmp_path / "one.ndjson"
+    tr = _trace(seed=1)
+    dump_traces([tr], path, ndjson=True)
+    ts = load_traces(path)
+    assert ts.scaling == (tr,)
+
+
+def test_loader_rejects_unknown_schema_version(tmp_path):
+    path = tmp_path / "t.json"
+    d = _trace().to_json_dict()
+    d["schema"] = 99
+    path.write_text(json.dumps({"schema": 99, "traces": [d]}))
+    with pytest.raises(ValueError, match="schema"):
+        load_traces(path)
+
+
+def test_wrapper_schema_covers_records(tmp_path):
+    """Regression: records inside a `{"schema": 1, "traces": [...]}`
+    wrapper need not repeat the schema per record — the wrapper's
+    declaration covers them (a per-record schema still wins)."""
+    path = tmp_path / "t.json"
+    d = _trace().to_json_dict()
+    del d["schema"]
+    path.write_text(json.dumps({"schema": 1, "traces": [d]}))
+    assert load_traces(path).scaling == (_trace(),)
+    bad = dict(d, schema=99)
+    path.write_text(json.dumps({"schema": 1, "traces": [bad]}))
+    with pytest.raises(ValueError, match="99"):
+        load_traces(path)
+
+
+def test_synthesized_traces_are_seed_reproducible():
+    a = synthesize_scaling_trace("DCOPY", "ROME", seed=11, noise=0.03,
+                                 n_events=4000)
+    b = synthesize_scaling_trace("DCOPY", "ROME", seed=11, noise=0.03,
+                                 n_events=4000)
+    c = synthesize_scaling_trace("DCOPY", "ROME", seed=12, noise=0.03,
+                                 n_events=4000)
+    assert a == b
+    assert a.bandwidth != c.bandwidth
+    assert a.source == "memsim" and a.seed == 11
+    assert a.cores == tuple(range(1, 9))  # ROME domain size
+
+
+# ---------------------------------------------------------------------------
+# Fitting
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_trace(f, bs, n_max=16, utilization="queue"):
+    cores = tuple(range(1, n_max + 1))
+    bw = forward_bandwidth(np.array(cores), f, bs,
+                           utilization=utilization)
+    return ScalingTrace(kernel="syn", arch="X", cores=cores,
+                        bandwidth=tuple(float(b) for b in bw))
+
+
+@pytest.mark.parametrize("utilization", ["queue", "recursion"])
+@pytest.mark.parametrize("f,bs", [(0.09, 103.0), (0.31, 54.0),
+                                  (0.83, 32.0)])
+def test_fit_recovers_exact_forward_curves(utilization, f, bs):
+    """On noiseless model-generated curves the fit must invert the
+    forward model to sub-percent accuracy across the physical f range."""
+    tr = _synthetic_trace(f, bs, utilization=utilization)
+    f_hat, bs_hat = fit_scaling_cell(tr, utilization=utilization,
+                                     backend="numpy")
+    assert f_hat == pytest.approx(f, rel=5e-3)
+    assert bs_hat == pytest.approx(bs, rel=5e-3)
+
+
+def test_batched_fit_is_one_pass_and_matches_per_cell():
+    """The batched pass over heterogeneous cells equals the sequential
+    per-cell loop it replaces."""
+    traces = [_synthetic_trace(0.2, 100.0),
+              _synthetic_trace(0.45, 60.0, n_max=8),
+              _synthetic_trace(0.8, 33.0, n_max=10)]
+    fit = fit_scaling(traces, backend="numpy")
+    assert len(fit) == 3
+    for i, tr in enumerate(traces):
+        f_i, bs_i = fit_scaling_cell(tr, backend="numpy")
+        assert fit.f[i] == pytest.approx(f_i, rel=1e-9)
+        assert fit.bs[i] == pytest.approx(bs_i, rel=1e-9)
+
+
+@pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
+def test_fit_backends_agree():
+    traces = [_synthetic_trace(0.2, 100.0),
+              _synthetic_trace(0.45, 60.0, n_max=8)]
+    fn = fit_scaling(traces, backend="numpy")
+    fj = fit_scaling(traces, backend="jax")
+    np.testing.assert_allclose(fn.f, fj.f, rtol=1e-9)
+    np.testing.assert_allclose(fn.bs, fj.bs, rtol=1e-9)
+
+
+def test_fit_recovers_memsim_inputs_within_bound():
+    """End-to-end on the instrument itself (small grid; the full Table II
+    sweep is the slow certification)."""
+    spec = table2.kernel("STREAM")
+    traces = [synthesize_scaling_trace(spec, "ROME", seed=s, noise=0.02,
+                                       n_events=6000) for s in range(3)]
+    fit = fit_scaling(traces, utilization="queue")
+    agg = aggregate_ensemble(fit)
+    cell = agg[("STREAM", "ROME")]
+    assert cell["f"].value == pytest.approx(spec.f["ROME"], rel=0.08)
+    assert cell["bs"].value == pytest.approx(spec.bs["ROME"], rel=0.08)
+    assert cell["f"].n_seeds == 3
+    assert cell["f"].lo <= cell["f"].value <= cell["f"].hi
+
+
+def test_fit_input_validation():
+    with pytest.raises(ValueError, match="utilization"):
+        fit_scaling([_synthetic_trace(0.2, 100.0)], utilization="magic")
+    with pytest.raises(ValueError, match="backend"):
+        fit_scaling([_synthetic_trace(0.2, 100.0)], backend="fortran")
+    empty = fit_scaling(TraceSet())
+    assert len(empty) == 0
+
+
+def test_utilization_curve_matches_solver_envelope():
+    """The fit's forward model and the sharing solver share one law:
+    b_s·U(n; f) equals the solver's homogeneous total bandwidth."""
+    f, bs = 0.19, 104.2
+    for mode in ("queue", "recursion"):
+        for n in (1, 3, 8, 20):
+            pred = sharing.predict([sharing.Group(n=n, f=f, bs=bs)],
+                                   utilization=mode)
+            want = forward_bandwidth(n, f, bs, utilization=mode)
+            assert pred.total_bw == pytest.approx(float(want), rel=1e-12)
+
+
+def test_utilization_curve_neutral_entries():
+    u = utilization_curve([0, 1, 4], 0.25, mode="queue")
+    assert u[0] == 1.0 and u[1] == 0.25 and u[2] == 1.0
+    with pytest.raises(ValueError, match="utilization"):
+        utilization_curve([1], 0.2, mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# Calibrated specs are first-class citizens
+# ---------------------------------------------------------------------------
+
+
+def test_calibrated_specs_feed_the_whole_stack():
+    spec = table2.kernel("DAXPY")
+    traces = [synthesize_scaling_trace(spec, "ROME", seed=s, noise=0.01,
+                                       n_events=6000) for s in range(2)]
+    cal = calibrated_specs(fit_scaling(traces))["DAXPY"]
+    # Group.of consumes it unchanged
+    g = sharing.Group.of(cal, "ROME", 4)
+    assert g.bs == cal.bs["ROME"] and g.f == cal.f["ROME"]
+    # the solver and the desync engine consume it unchanged
+    pred = sharing.predict([g])
+    assert pred.total_bw > 0
+    from repro.core.desync import DesyncSimulator, Work
+    recs = DesyncSimulator([[Work("DAXPY", 1e6)]], "ROME",
+                           specs={"DAXPY": cal}).run(t_max=10)
+    assert len(recs) == 1
+    # template inheritance keeps the stream decomposition
+    assert (cal.reads, cal.writes, cal.rfo) == \
+        (spec.reads, spec.writes, spec.rfo)
+
+
+def test_envelope_fit_recovers_bs_from_pairs():
+    """Eq. 4 in reverse: per-kernel b_s from saturated paired totals."""
+    a, b = table2.kernel("DCOPY"), table2.kernel("DDOT2")
+    pairs = [synthesize_pair_trace(a, b, "CLX", na, 20 - na, seed=na,
+                                   n_events=6000)
+             for na in (4, 8, 12, 16)]
+    env = fit_envelope(pairs)
+    assert env.bs["CLX"]["DCOPY"] == pytest.approx(a.bs["CLX"], rel=0.08)
+    assert env.bs["CLX"]["DDOT2"] == pytest.approx(b.bs["CLX"], rel=0.08)
+    assert env.residual["CLX"] < 3.0
+    mix = env.envelope("CLX", [("DCOPY", 10), ("DDOT2", 10)])
+    want = sharing.overlapped_saturated_bw(
+        [sharing.Group.of(a, "CLX", 10), sharing.Group.of(b, "CLX", 10)])
+    assert mix == pytest.approx(want, rel=0.08)
+
+
+def test_predict_pairs_is_one_batched_solve():
+    specs = {k: table2.kernel(k) for k in ("DCOPY", "DDOT2", "DAXPY")}
+    pairs = [
+        PairTrace(kernels=("DCOPY", "DDOT2"), arch="CLX", n=(12, 8),
+                  bandwidth=(1.0, 1.0)),
+        PairTrace(kernels=("DAXPY", "DCOPY"), arch="ROME", n=(4, 4),
+                  bandwidth=(1.0, 1.0)),
+    ]
+    got = predict_pairs(specs, pairs)
+    assert got.shape == (2, 2)
+    want = sharing.pair(specs["DCOPY"], specs["DDOT2"], "CLX", 12, 8,
+                        utilization="queue")
+    np.testing.assert_allclose(got[0], want.bw_group, rtol=1e-12)
+    assert predict_pairs(specs, []).shape == (0, 2)
+
+
+# ---------------------------------------------------------------------------
+# Certification (reduced grid; full grid is slow-marked)
+# ---------------------------------------------------------------------------
+
+
+def test_certify_quick_grid_passes_bound():
+    report = certify(["DCOPY", "DDOT2"], ["ROME"], seeds=(0, 1),
+                     noise=0.02, n_events=5000, pairs_per_arch=2)
+    assert report.ok()
+    assert len(report.cells) == 2
+    assert report.max_f_err < 0.08
+    assert report.max_bs_err < 0.08
+    assert report.max_pair_err < 0.08
+    assert report.wall_batched_s > 0 and report.wall_sequential_s > 0
+    d = report.to_json_dict()
+    assert d["ok"] and len(d["cells"]) == 2
+    assert d["fit_wall_s"]["speedup_x"] == pytest.approx(report.speedup)
+    json.dumps(d)  # artifact must be serializable
+
+
+def test_certify_works_on_custom_specs_and_detects_mismatch():
+    """certify() accepts a custom ground-truth table (synthetic kernels
+    calibrate too), and the error metric is not vacuous: scoring a fit
+    against a contradicting truth blows the bound."""
+    custom = {
+        "PROBE": table2.KernelSpec.synthetic("PROBE", 0.19, 104.2,
+                                             arch="ROME"),
+    }
+    report = certify(["PROBE"], ["ROME"], seeds=(0,), noise=0.0,
+                     n_events=5000, pairs_per_arch=0, specs=custom,
+                     sequential_baseline=False)
+    assert report.ok() and len(report.cells) == 1
+    from repro.calibrate.certify import CellError
+    bad = CellError(kernel="PROBE", arch="ROME",
+                    f_true=0.80, f_fit=report.cells[0].f_fit,
+                    bs_true=36.0, bs_fit=report.cells[0].bs_fit)
+    assert bad.f_err > 0.08 and bad.bs_err > 0.08
+
+
+def test_holdout_pairs_are_heterogeneous():
+    """Regression: with >= 2 kernels in the grid, every held-out pair
+    must mix two distinct kernels (a self-pair would just re-test the
+    fitted homogeneous curve)."""
+    from repro.calibrate.certify import _holdout_pairs
+    truth = dict(table2.TABLE2)
+    for kernels in (["DCOPY", "DAXPY"], sorted(truth)[:5], sorted(truth)):
+        pairs = _holdout_pairs(kernels, ["CLX", "ROME"], 4, truth)
+        assert len(pairs) == 8
+        for ka, kb, arch, na, nb in pairs:
+            assert ka != kb, (kernels, ka)
+            assert na >= 1 and nb >= 1
+    # degenerate grids do not crash
+    assert _holdout_pairs([], ["CLX"], 2, truth) == []
+    solo = _holdout_pairs(["DCOPY"], ["CLX"], 1, truth)
+    assert solo == [("DCOPY", "DCOPY", "CLX", 10, 10)]
+
+
+def test_memsim_trace_matches_queue_forward_model():
+    """The instrument realizes the queue forward model to a few percent —
+    the premise the whole calibration rests on."""
+    spec = table2.kernel("DDOT2")
+    tr = synthesize_scaling_trace(spec, "CLX", n_events=6000)
+    want = forward_bandwidth(np.array(tr.cores), spec.f["CLX"],
+                             spec.bs["CLX"], utilization="queue")
+    np.testing.assert_allclose(tr.bandwidth, want, rtol=0.06)

@@ -1,0 +1,58 @@
+"""Slow certification: the full Table II × architecture round trip.
+
+Acceptance gate of the calibration PR — every (kernel, arch) cell's
+``(f, b_s)`` must be recovered from memsim-generated scaling curves
+within the paper's 8 % bound, with the batched fit running as one
+vectorized pass.  Runs in the dedicated `-m slow` CI job alongside the
+``BENCH_calibrate.json`` artifact regeneration.
+"""
+
+import pytest
+
+from repro.calibrate import ERROR_BOUND, certify
+from repro.core.table2 import ARCHS, TABLE2
+
+pytestmark = pytest.mark.slow
+
+
+@pytest.fixture(scope="module")
+def report():
+    return certify()  # full grid: every Table II kernel × arch, 3 seeds
+
+
+def test_every_cell_within_bound(report):
+    assert len(report.cells) == len(TABLE2) * len(ARCHS)
+    bad = [c for c in report.cells
+           if c.f_err >= ERROR_BOUND or c.bs_err >= ERROR_BOUND]
+    assert not bad, [(c.kernel, c.arch, c.f_err, c.bs_err) for c in bad]
+
+
+def test_holdout_pair_predictions_within_bound(report):
+    assert report.pairs, "certification must exercise paired shares"
+    assert report.max_pair_err < ERROR_BOUND, [
+        (p.kernels, p.arch, p.errs) for p in report.pairs
+        if max(p.errs) >= ERROR_BOUND]
+
+
+def test_confidence_intervals_cover_truth(report):
+    """The seed-ensemble CI must be a meaningful band: finite, ordered,
+    and (loosely) bracketing the fitted value."""
+    for (kern, arch), cell in report.intervals.items():
+        for field in ("f", "bs"):
+            v = cell[field]
+            assert v.lo <= v.value <= v.hi, (kern, arch, field)
+            assert v.n_seeds == report.n_seeds
+
+
+def test_batched_pass_beats_sequential_baseline(report):
+    """The single-pass fit must not be slower than the per-cell loop it
+    replaces (the artifact records the actual speedup)."""
+    assert report.wall_sequential_s > report.wall_batched_s
+
+
+def test_report_round_trips_to_json(report):
+    import json
+    d = json.loads(json.dumps(report.to_json_dict()))
+    assert d["ok"] is True
+    assert d["benchmark"] == "calibrate_roundtrip"
+    assert len(d["cells"]) == len(report.cells)

@@ -100,10 +100,46 @@ def test_batch_matches_per_scenario_scalar_runs():
                                    [r.end for r in scalar], rtol=1e-9)
 
 
-def test_batch_deadlock_raises():
+def test_batch_deadlock_masks_by_default():
+    """A deadlocked scenario no longer poisons the batch: it is reported
+    in the ``failed`` mask with its partial records, and every healthy
+    scenario still runs to completion (regression for the former
+    whole-batch RuntimeError abort)."""
+    deadlocked = [[Allreduce()], [Allreduce(), Allreduce()]]
+    healthy = [[Work("DDOT2", MB, tag="d")], [Work("DAXPY", MB, tag="x")]]
+    res = run_batch([deadlocked, healthy, deadlocked], "CLX", t_max=1.0)
+    assert res.failed.tolist() == [True, False, True]
+    assert res.n_failed == 2
+    # the healthy scenario matches its own scalar run, record-for-record
+    scalar = DesyncSimulator(healthy, "CLX").run(t_max=1.0)
+    assert res.records[1] == scalar
+    # the deadlocked scenarios froze at the rendezvous: the lone-rank
+    # allreduce of scenario 0 retired (rank 1 is parked at its second),
+    # but nothing past the deadlock point exists
+    assert all(r.index == 0 for r in res.records[0])
+    # ensemble statistics cannot silently absorb the partial scenarios:
+    # skew is NaN for failed entries, per-scenario aggregation raises
+    sk = res.skew_by_tag("d")
+    assert np.isnan(sk[0]) and np.isnan(sk[2]) and not np.isnan(sk[1])
+    with pytest.raises(ValueError, match="deadlocked"):
+        res.durations_by_tag(0, "Allreduce")
+    assert res.durations_by_tag(0, "Allreduce", allow_failed=True)
+    assert res.durations_by_tag(1, "d")  # healthy scenario unaffected
+
+
+def test_batch_deadlock_raise_mode():
     with pytest.raises(RuntimeError, match="deadlock"):
         run_batch([[[Allreduce()], [Allreduce(), Allreduce()]]], "CLX",
-                  t_max=1.0)
+                  t_max=1.0, on_deadlock="raise")
+    with pytest.raises(ValueError, match="on_deadlock"):
+        run_batch([[[Work("DDOT2", MB)]]], "CLX", on_deadlock="ignore")
+
+
+def test_healthy_batch_has_clean_failed_mask():
+    progs = _programs(TAILS["allreduce"], seed=1, n=4)
+    res = run_batch([progs, progs], "CLX", t_max=60)
+    assert res.failed.tolist() == [False, False]
+    assert res.n_failed == 0
 
 
 def test_batch_validation_errors():
@@ -211,10 +247,16 @@ def test_jax_backend_matches_numpy():
 
 
 @pytest.mark.skipif(not HAVE_JAX, reason="jax not installed")
-def test_jax_backend_deadlock_raises():
+def test_jax_backend_deadlock_masks_and_raises():
+    deadlocked = [[Allreduce()], [Allreduce(), Allreduce()]]
+    healthy = [[Work("DDOT2", MB, tag="d")], [Work("DAXPY", MB, tag="x")]]
+    res = run_batch([deadlocked, healthy], "CLX", t_max=1.0,
+                    backend="jax")
+    assert res.failed.tolist() == [True, False]
+    assert len(res.records[1]) == 2
     with pytest.raises(RuntimeError, match="deadlock"):
-        run_batch([[[Allreduce()], [Allreduce(), Allreduce()]]], "CLX",
-                  t_max=1.0, backend="jax")
+        run_batch([deadlocked], "CLX", t_max=1.0, backend="jax",
+                  on_deadlock="raise")
 
 
 # ---------------------------------------------------------------------------

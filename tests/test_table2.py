@@ -102,3 +102,113 @@ def test_layer_condition_reduces_f():
 def test_kernel_lookup_error():
     with pytest.raises(KeyError):
         table2.kernel("NOPE")
+
+
+# ---------------------------------------------------------------------------
+# RECONSTRUCTED cells: every interpolated value must stay inside the
+# documented invariants (module docstring of core/table2.py).
+# ---------------------------------------------------------------------------
+
+RECON = sorted(table2.RECONSTRUCTED)
+
+
+def test_reconstructed_triples_are_well_formed():
+    for kern, field, arch in RECON:
+        assert kern in TABLE2, (kern, field, arch)
+        assert field in ("f", "bs"), (kern, field, arch)
+        assert arch in ARCHS, (kern, field, arch)
+
+
+@pytest.mark.parametrize("kern,field,arch",
+                         [t for t in RECON if t[1] == "f"],
+                         ids=lambda t: str(t))
+def test_reconstructed_f_cells_in_admissible_range(kern, field, arch):
+    val = TABLE2[kern].f[arch]
+    assert 0.0 < val <= 1.0
+    if arch == "ROME" and not kern.startswith("Jacobi"):
+        # Rome invariant: f close to one for streaming kernels.
+        assert val > 0.7, (kern, arch, val)
+    if arch != "ROME":
+        # Intel invariant: f well below one even for pure streaming.
+        assert val < 0.45, (kern, arch, val)
+
+
+@pytest.mark.parametrize("kern,field,arch",
+                         [t for t in RECON if t[1] == "bs"],
+                         ids=lambda t: str(t))
+def test_reconstructed_bs_cells_respect_read_only_premium(kern, field,
+                                                          arch):
+    """Interpolated b_s values must sit on the correct side of the
+    read-only > read-write saturation split used to fill them."""
+    val = TABLE2[kern].bs[arch]
+    assert val > 0.0
+    spec = TABLE2[kern]
+    rw = [s.bs[arch] for s in TABLE2.values() if not s.read_only]
+    ro = [s.bs[arch] for s in TABLE2.values() if s.read_only]
+    if spec.read_only:
+        # Read-only kernels saturate 5–15 % above the write-kernel band
+        # (DDOT3/CLX is the paper's own exception — not reconstructed):
+        # an interpolated cell must clear the fastest write kernel but
+        # stay within a bounded premium over it.
+        assert val >= max(rw), (kern, arch, val)
+        assert val <= 1.20 * max(rw), (kern, arch, val)
+    else:
+        assert val <= max(ro), (kern, arch, val)
+
+
+def test_reconstructed_rome_daxpy_dscal_ordering():
+    """The Rome f cells of DAXPY and DSCAL are both reconstructed; their
+    documented ordering (f_DAXPY > f_DSCAL, reversed vs Intel) must hold
+    in the filled table."""
+    assert ("DAXPY", "f", "ROME") in table2.RECONSTRUCTED
+    assert ("DSCAL", "f", "ROME") in table2.RECONSTRUCTED
+    assert TABLE2["DAXPY"].f["ROME"] > TABLE2["DSCAL"].f["ROME"]
+
+
+def test_reconstructed_cells_keep_clx_spread_smallest():
+    """CLX must keep the smallest f and b_s spread among the Intel
+    machines *including* the reconstructed cells (several of which are
+    CLX entries).  Rome is excluded: its near-one f values compress its
+    spread trivially, which is not the invariant the interpolation used."""
+    def spread(arch, field):
+        vals = [getattr(s, field)[arch] for s in TABLE2.values()]
+        return max(vals) / min(vals)
+
+    for field in ("f", "bs"):
+        for other in ("BDW-1", "BDW-2"):
+            assert spread("CLX", field) <= spread(other, field), \
+                (field, other)
+
+
+# ---------------------------------------------------------------------------
+# from_calibration: calibrated inputs materialize as first-class specs
+# ---------------------------------------------------------------------------
+
+
+def test_from_calibration_with_template_keeps_streams():
+    from repro.core.table2 import KernelSpec
+    spec = KernelSpec.from_calibration(
+        "DCOPY-cal", {"CLX": 0.21}, {"CLX": 101.0},
+        template=TABLE2["DCOPY"])
+    assert spec.name == "DCOPY-cal"
+    assert spec.f == {"CLX": 0.21} and spec.bs == {"CLX": 101.0}
+    # stream decomposition inherited -> ECM + desync keep working
+    assert (spec.reads, spec.writes, spec.rfo) == (1, 1, 1)
+    assert spec.single_core_bw("CLX") == pytest.approx(0.21 * 101.0)
+
+
+def test_from_calibration_without_template():
+    from repro.core.table2 import KernelSpec
+    spec = KernelSpec.from_calibration("probe", {"TPU": 0.4},
+                                       {"TPU": 800.0})
+    assert spec.elem_transfers == 1
+
+
+def test_from_calibration_rejects_unphysical_inputs():
+    from repro.core.table2 import KernelSpec
+    with pytest.raises(ValueError, match="outside"):
+        KernelSpec.from_calibration("bad", {"CLX": 1.5}, {"CLX": 100.0})
+    with pytest.raises(ValueError, match="> 0"):
+        KernelSpec.from_calibration("bad", {"CLX": 0.5}, {"CLX": -1.0})
+    with pytest.raises(ValueError, match="architecture sets"):
+        KernelSpec.from_calibration("bad", {"CLX": 0.5}, {"ROME": 30.0})
