@@ -1,0 +1,157 @@
+"""Facade dispatch overhead: api.predict vs a direct solve_batch call.
+
+The facade's contract is "declare once, predict many": a ScenarioBatch
+is built once (kernel resolution, array packing, validation — all cached
+on the frozen batch) and predicted as often as the serving loop needs.
+This benchmark measures what the *per-predict* dispatch layer costs on
+top of the engine it dispatches to, per batch size and backend:
+
+    overhead = t(api.predict(batch)) / t(sharing.solve_batch(arrays)) - 1
+
+Acceptance: < 5 % at B = 1, ~0 at B >= 64 (where the solve dominates).
+``python benchmarks/api_overhead.py --out BENCH_api.json`` writes the
+committed artifact and exits nonzero if the bound is broken.
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import sys
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro import api
+from repro.core import sharing
+from repro.core.sharing import HAVE_JAX
+
+B_SIZES = (1, 16, 64, 256)
+OVERHEAD_BOUND_B1 = 0.05     # < 5 % at B = 1 (the acceptance bound)
+OVERHEAD_BOUND_LARGE = 0.05  # "~0" at B >= 64 ...
+ABS_SLACK_US = 30.0          # ... or additive cost within dispatch jitter
+                             # (the jitted solve itself wobbles ~100 µs
+                             # run to run on a shared container)
+REPS = 100
+SAMPLES = 25
+
+
+def _time_pair_us(fn_a, fn_b, reps: int = REPS,
+                  samples: int = SAMPLES) -> tuple[float, float]:
+    """Best-of-``samples`` mean over ``reps`` calls for two functions,
+    in µs.  Sample blocks alternate between the two so slow drift
+    (thermal, other tenants) hits both sides alike; min-of-means is
+    robust to scheduler noise without single-timestamp lucky bias.
+    GC is paused so collection pauses don't land on one side."""
+    best_a = best_b = float("inf")
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(samples):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn_a()
+            best_a = min(best_a, (time.perf_counter() - t0) / reps)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn_b()
+            best_b = min(best_b, (time.perf_counter() - t0) / reps)
+            gc.collect()
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    return best_a * 1e6, best_b * 1e6
+
+
+def _batch_for(b: int) -> api.ScenarioBatch:
+    """B two-group scenarios cycling through distinct thread splits."""
+    base = api.Scenario.on("CLX").run("DCOPY", 1).run("DDOT2", 1)
+    na = 1 + np.arange(b) % 19
+    return base.batch(np.stack([na, 20 - na], axis=-1))
+
+
+def measure(backends: Sequence[str] | None = None) -> list[dict]:
+    out = []
+    for b in B_SIZES:
+        batch = _batch_for(b)
+        n, f, bs, names = batch.arrays  # packing is paid at build time
+        bks = backends if backends is not None else (
+            ["numpy"] + (["jax"] if HAVE_JAX else []))
+        for bk in bks:
+            direct = lambda: sharing.solve_batch(  # noqa: E731
+                n, f, bs, names=names, backend=bk)
+            facade = lambda: api.predict(batch, backend=bk)  # noqa: E731
+            direct()
+            facade()    # warm caches + jit before timing
+            t_direct, t_facade = _time_pair_us(direct, facade)
+            out.append({
+                "B": b, "backend": bk,
+                "direct_us": round(t_direct, 3),
+                "facade_us": round(t_facade, 3),
+                "overhead_us": round(t_facade - t_direct, 3),
+                "overhead_pct": round(
+                    (t_facade / t_direct - 1.0) * 100.0, 2),
+            })
+    return out
+
+
+def check(results: list[dict]) -> bool:
+    """B = 1 must be under the relative acceptance bound.  At B >= 64
+    the facade's cost is a few µs additive while the jitted solve's own
+    run-to-run jitter is tens of µs, so a relative bound alone would
+    flap — accept when either the relative bound or the additive slack
+    holds."""
+    ok = True
+    for r in results:
+        abs_us = r["facade_us"] - r["direct_us"]
+        if r["B"] == 1:
+            ok &= r["overhead_pct"] <= OVERHEAD_BOUND_B1 * 100.0
+        elif r["B"] >= 64:
+            ok &= (r["overhead_pct"] <= OVERHEAD_BOUND_LARGE * 100.0
+                   or abs_us <= ABS_SLACK_US)
+    return ok
+
+
+def rows():
+    results = measure()
+    out = [(f"api_overhead/B={r['B']}/{r['backend']}", r["facade_us"],
+            f"direct={r['direct_us']:.1f}us;"
+            f"overhead={r['overhead_pct']:+.2f}%")
+           for r in results]
+    out.append(("api_overhead/check/bounds", 0.0,
+                f"ok={check(results)};bound_B1<"
+                f"{OVERHEAD_BOUND_B1:.0%};bound_B>=64<"
+                f"{OVERHEAD_BOUND_LARGE:.0%}"))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="JSON artifact path")
+    args = ap.parse_args(argv)
+    results = measure()
+    ok = check(results)
+    report = {
+        "benchmark": "api_overhead",
+        "jax": HAVE_JAX,
+        "bounds": {"B1": OVERHEAD_BOUND_B1,
+                   "large": OVERHEAD_BOUND_LARGE},
+        "ok": ok,
+        "results": results,
+    }
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.out}  (ok={ok})")
+    for r in results:
+        print(f"B={r['B']:>4} {r['backend']:>5}: facade "
+              f"{r['facade_us']:8.1f}us  direct {r['direct_us']:8.1f}us  "
+              f"overhead {r['overhead_pct']:+.2f}%")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

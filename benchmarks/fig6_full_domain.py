@@ -5,21 +5,20 @@ four architectures.  For every split (n_I, n_t - n_I) we report the model's
 per-core bandwidth for both kernels, the total, and the queue-simulator
 measurement with its relative deviation.
 
-The model side of the sweep runs through the **batched solver**
-(sharing.solve_batch): all splits of one (arch, pairing) are a single
-vmapped/jitted call instead of a Python loop of scalar solves.  The
-microscopic queue simulator stays per-split (it is the measurement
-instrument, not the model).  The ``us`` column times the model solve
-only — it is not comparable to pre-batching revisions, which included
-the simulator in the window.
+The model side of the sweep is declared once through the facade
+(api.ScenarioBatch.split_sweep) and solved in a single api.predict call —
+the engine dispatch picks the batched solver.  The microscopic queue
+simulator stays per-split (it is the measurement instrument, not the
+model).  The ``us`` column times the model solve only — it is not
+comparable to pre-batching revisions, which included the simulator in
+the window.
 """
 
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
+from repro import api
 from repro.core import memsim, sharing, table2
 
 PAIRINGS = [("DCOPY", "DDOT2"), ("JacobiL3-v1", "DDOT1"),
@@ -27,14 +26,11 @@ PAIRINGS = [("DCOPY", "DDOT2"), ("JacobiL3-v1", "DDOT1"),
 DOMAIN = {"BDW-1": 10, "BDW-2": 18, "CLX": 20, "ROME": 8}
 
 
-def sweep_batch(a: table2.KernelSpec, b: table2.KernelSpec, arch: str,
-                n_dom: int) -> sharing.BatchSharePrediction:
-    """All (n_a, n_dom - n_a) splits of one pairing as one batched solve."""
-    na = np.arange(1, n_dom)
-    n = np.stack([na, n_dom - na], axis=-1)
-    f = np.broadcast_to([a.f[arch], b.f[arch]], n.shape)
-    bs = np.broadcast_to([a.bs[arch], b.bs[arch]], n.shape)
-    return sharing.solve_batch(n, f, bs, utilization="queue")
+def sweep_batch(ka: str, kb: str, arch: str,
+                n_dom: int) -> api.ScenarioBatch:
+    """All (n_a, n_dom - n_a) splits of one pairing as one scenario set."""
+    return api.ScenarioBatch.split_sweep(arch, ka, kb, n_dom,
+                                         utilization="queue")
 
 
 def rows():
@@ -42,8 +38,9 @@ def rows():
     for arch, n_dom in DOMAIN.items():
         for ka, kb in PAIRINGS:
             a, b = table2.kernel(ka), table2.kernel(kb)
+            scenarios = sweep_batch(ka, kb, arch, n_dom)
             t0 = time.perf_counter()
-            batch = sweep_batch(a, b, arch, n_dom)
+            batch = api.predict(scenarios)
             us = (time.perf_counter() - t0) * 1e6 / (n_dom - 1)
             per_core = batch.bw_per_core
             worst = 0.0

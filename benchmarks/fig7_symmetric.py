@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
+from repro import api
 from repro.core import memsim, sharing, table2
 
 PAIRINGS = [("DCOPY", "DDOT2"), ("JacobiL3-v1", "DDOT1"),
@@ -23,16 +22,14 @@ def curve(arch, ka, kb):
     queue-simulator validation runs (same convention as fig6)."""
     a, b = table2.kernel(ka), table2.kernel(kb)
     n_half = DOMAIN[arch] // 2
-    # Model: the whole thread-scaling curve is one batched solve.
-    ns = np.arange(1, n_half + 1)
-    n = np.stack([ns, ns], axis=-1)
-    f = np.broadcast_to([a.f[arch], b.f[arch]], n.shape)
-    bs = np.broadcast_to([a.bs[arch], b.bs[arch]], n.shape)
+    # Model: the whole thread-scaling curve is one facade batch.
+    scenarios = api.ScenarioBatch.symmetric_sweep(arch, ka, kb, n_half,
+                                                  utilization="queue")
     t0 = time.perf_counter()
-    batch = sharing.solve_batch(n, f, bs, utilization="queue")
-    model_us = (time.perf_counter() - t0) * 1e6 / len(ns)
+    batch = api.predict(scenarios)
+    model_us = (time.perf_counter() - t0) * 1e6 / n_half
     pts = []
-    for row, nt in enumerate(ns):
+    for row, nt in enumerate(range(1, n_half + 1)):
         sim = memsim.simulate([sharing.Group.of(a, arch, int(nt)),
                                sharing.Group.of(b, arch, int(nt))],
                               n_events=20_000)

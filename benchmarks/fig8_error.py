@@ -9,6 +9,7 @@ import itertools
 import statistics
 import time
 
+from repro import api
 from repro.core import memsim, sharing, table2
 
 DOMAIN = {"BDW-1": 10, "BDW-2": 18, "CLX": 20, "ROME": 8}
@@ -16,20 +17,22 @@ DOMAIN = {"BDW-1": 10, "BDW-2": 18, "CLX": 20, "ROME": 8}
 
 def errors_for(arch: str, n_events=20_000):
     n_dom = DOMAIN[arch]
-    errs = []
     pairs = list(itertools.combinations(table2.FIG9_KERNELS, 2))  # 45 > 30
-    for ka, kb in pairs:
+    configs = [(ka, kb, n) for ka, kb in pairs
+               for n in (2, n_dom // 4, n_dom // 2) if n > 0]
+    # Model: every (pairing, split) of this arch in ONE facade batch.
+    batch = api.predict(api.ScenarioBatch.of(
+        [api.Scenario.on(arch, utilization="queue")
+         .run(ka, n).run(kb, n) for ka, kb, n in configs]))
+    errs = []
+    for row, (ka, kb, n) in enumerate(configs):
         a, b = table2.kernel(ka), table2.kernel(kb)
-        for n in (2, n_dom // 4, n_dom // 2):
-            if n == 0:
-                continue
-            pred = sharing.pair(a, b, arch, n, n, utilization="queue")
-            sim = memsim.simulate([sharing.Group.of(a, arch, n),
-                                   sharing.Group.of(b, arch, n)],
-                                  n_events=n_events)
-            for i in range(2):
-                model = pred.bw_per_core[i]
-                errs.append(abs(sim[i] / n - model) / model)
+        sim = memsim.simulate([sharing.Group.of(a, arch, n),
+                               sharing.Group.of(b, arch, n)],
+                              n_events=n_events)
+        for i in range(2):
+            model = batch.bw_per_core[row, i]
+            errs.append(abs(sim[i] / n - model) / model)
     return errs
 
 

@@ -7,6 +7,8 @@ SymGS ~20x DDOT):
   fig3a : SymGS -> DDOT2 -> p2p wait -> SpMV     (modified, no allreduce)
   fig3b : SymGS -> DDOT2 -> DAXPY                (modified, no allreduce)
 
+Each scenario is one declarative facade build; its 6-seed noise ensemble
+advances in a single batched simulate() call instead of a per-seed loop.
 Reported: skewness of accumulated DDOT2 time (paper: fig1/3a negative =
 resync; fig3b positive = desync), start/end spreads, and the late-starters-
 run-faster monotonicity of Fig. 1(c).
@@ -14,64 +16,53 @@ run-faster monotonicity of Fig. 1(c).
 
 from __future__ import annotations
 
-import random
 import time
 
-from repro.core.desync import (Allreduce, DesyncSimulator, Idle,
-                               WaitNeighbors, Work, durations_by_tag,
-                               end_spread, skewness, start_spread)
+from repro import api
 
 MB = 1e6
 N_RANKS = 20
 ARCH = "CLX"
+N_SEEDS = 6
 
-
-def _programs(tail, seed):
-    rng = random.Random(seed)
-    progs = []
-    for _ in range(N_RANKS):
-        progs.append([
-            Idle(rng.expovariate(1 / 6e-5), tag="noise"),
-            Work("Schoenauer", 40 * MB, tag="symgs"),
-            Work("DDOT2", 8 * MB, tag="ddot2"),
-            *tail,
-        ])
-    return progs
-
+BASE = (api.Scenario.on(ARCH).ranks(N_RANKS)
+        .with_noise(6e-5, seed=0, ensemble=N_SEEDS)
+        .step("Schoenauer", 40 * MB, tag="symgs")
+        .step("DDOT2", 8 * MB, tag="ddot2"))
 
 SCENARIOS = {
-    "fig1_allreduce_resync": [Allreduce(), Work("DAXPY", 30 * MB,
-                                                tag="daxpy")],
-    "fig3a_p2p_spmv": [WaitNeighbors(tag="p2p"),
-                       Work("Schoenauer", 40 * MB, tag="spmv")],
-    "fig3b_daxpy_desync": [Work("DAXPY", 30 * MB, tag="daxpy")],
+    "fig1_allreduce_resync":
+        BASE.barrier().step("DAXPY", 30 * MB, tag="daxpy"),
+    "fig3a_p2p_spmv":
+        BASE.halo().step("Schoenauer", 40 * MB, tag="spmv"),
+    "fig3b_daxpy_desync":
+        BASE.step("DAXPY", 30 * MB, tag="daxpy"),
 }
 
 
-def run_scenario(tail, seeds=range(6)):
-    sks, sss, ess, mono = [], [], [], []
-    for s in seeds:
-        sim = DesyncSimulator(_programs(tail, s), ARCH)
-        recs = sim.run(t_max=60)
-        sks.append(skewness(durations_by_tag(recs, "ddot2",
-                                             n_ranks=N_RANKS)))
-        sss.append(start_spread(recs, "ddot2"))
-        ess.append(end_spread(recs, "ddot2"))
+def run_scenario(scenario):
+    res = api.simulate(scenario, t_max=60)
+    sss, ess, mono = [], [], []
+    for b in range(N_SEEDS):
+        recs = res.records(b)
+        sss.append(res.start_spread("ddot2", b))
+        ess.append(res.end_spread("ddot2", b))
         dd = sorted((r.start, r.duration) for r in recs if r.tag == "ddot2")
         k = len(dd) // 3
         early = sum(d for _, d in dd[:k]) / k
         late = sum(d for _, d in dd[-k:]) / k
         mono.append(early / late)
-    n = len(sks)
-    return (sum(sks) / n, sum(sss) / n, sum(ess) / n, sum(mono) / n)
+    n = N_SEEDS
+    return (res.mean_skew("ddot2"), sum(sss) / n, sum(ess) / n,
+            sum(mono) / n)
 
 
 def rows():
     out = []
-    for name, tail in SCENARIOS.items():
+    for name, scenario in SCENARIOS.items():
         t0 = time.perf_counter()
-        sk, ss, es, mono = run_scenario(tail)
-        us = (time.perf_counter() - t0) * 1e6 / 6
+        sk, ss, es, mono = run_scenario(scenario)
+        us = (time.perf_counter() - t0) * 1e6 / N_SEEDS
         out.append((f"hpcg/{name}", us,
                     f"skew={sk:+.2f};start_spread={ss*1e3:.2f}ms;"
                     f"end_spread={es*1e3:.2f}ms;early/late_runtime="

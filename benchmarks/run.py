@@ -1,18 +1,23 @@
 """Benchmark driver: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV to stdout.  Run with:
+Default output is ``name,us_per_call,derived`` CSV on stdout:
     PYTHONPATH=src python -m benchmarks.run [--only fig8]
+
+``--json`` instead aggregates every module's rows into one
+machine-readable report (optionally written to ``--out``):
+    PYTHONPATH=src python -m benchmarks.run --json --out report.json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
-from . import (calibrate_roundtrip, desync_scaling, fig6_full_domain,
-               fig7_symmetric, fig8_error, fig9_pairings, hpcg_desync,
-               table2_kernels, tpu_overlap)
+from . import (api_overhead, calibrate_roundtrip, desync_scaling,
+               fig6_full_domain, fig7_symmetric, fig8_error, fig9_pairings,
+               hpcg_desync, table2_kernels, tpu_overlap)
 
 MODULES = {
     "table2": table2_kernels,
@@ -24,19 +29,62 @@ MODULES = {
     "tpu_overlap": tpu_overlap,
     "desync_scaling": desync_scaling,
     "calibrate": calibrate_roundtrip,
+    "api_overhead": api_overhead,
 }
 
 
+def collect(keys) -> tuple[dict[str, list[dict]], dict[str, str]]:
+    """Run the requested modules; returns (rows per module, failures)."""
+    results: dict[str, list[dict]] = {}
+    failures: dict[str, str] = {}
+    for key in keys:
+        try:
+            results[key] = [
+                {"name": name, "us_per_call": round(us, 1),
+                 "derived": derived}
+                for name, us, derived in MODULES[key].rows()]
+        except Exception:  # noqa: BLE001
+            failures[key] = traceback.format_exc(limit=1)
+    return results, failures
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", choices=sorted(MODULES), default=None)
+    ap.add_argument("--json", action="store_true",
+                    help="emit one aggregated JSON report instead of CSV")
+    ap.add_argument("--out", default=None,
+                    help="with --json: write the report here instead of "
+                         "stdout")
     args = ap.parse_args()
-    mods = {args.only: MODULES[args.only]} if args.only else MODULES
+    keys = [args.only] if args.only else list(MODULES)
+
+    if args.json:
+        results, failures = collect(keys)
+        report = {
+            "benchmark": "benchmarks.run",
+            "modules": results,
+            "failures": failures,
+            "n_rows": sum(len(r) for r in results.values()),
+            "ok": not failures,
+        }
+        text = json.dumps(report, indent=2) + "\n"
+        if args.out:
+            with open(args.out, "w") as fh:
+                fh.write(text)
+            print(f"wrote {args.out}  (modules={len(results)}, "
+                  f"rows={report['n_rows']}, ok={report['ok']})")
+        else:
+            sys.stdout.write(text)
+        if failures:
+            sys.exit(1)
+        return
+
     print("name,us_per_call,derived")
     failures = 0
-    for key, mod in mods.items():
+    for key in keys:
         try:
-            for name, us, derived in mod.rows():
+            for name, us, derived in MODULES[key].rows():
                 print(f"{name},{us:.1f},{derived}")
             sys.stdout.flush()
         except Exception:  # noqa: BLE001

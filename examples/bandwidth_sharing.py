@@ -3,7 +3,10 @@
 Run:  PYTHONPATH=src python examples/bandwidth_sharing.py
 """
 
-from repro.core import sharing, table2
+import numpy as np
+
+from repro import api
+from repro.core import table2
 from repro.core.overlap import Phase, overlap_pair
 from repro.runtime.overlap_schedule import plan_gradient_overlap
 from repro.core.hlo import RooflineTerms
@@ -11,12 +14,14 @@ from repro.core.hlo import RooflineTerms
 print("=" * 70)
 print("1. Full-domain sweep (paper Fig. 6): DCOPY vs DDOT2 on CLX")
 print("=" * 70)
-dcopy, ddot2 = table2.kernel("DCOPY"), table2.kernel("DDOT2")
+# Declare the sweep once; one batched facade call solves every split.
+splits = np.array([[na, 20 - na] for na in range(2, 20, 3)])
+batch = api.predict(api.Scenario.on("CLX")
+                    .run("DCOPY", 1).run("DDOT2", 1).batch(splits))
 print(f"{'n_DCOPY':>8} {'n_DDOT2':>8} {'bw/core A':>10} {'bw/core B':>10} "
       f"{'total':>8}")
-for na in range(2, 20, 3):
-    p = sharing.pair(dcopy, ddot2, "CLX", na, 20 - na)
-    print(f"{na:>8} {20-na:>8} {p.bw_per_core[0]:>10.2f} "
+for (na, nb), p in zip(splits, batch):
+    print(f"{na:>8} {nb:>8} {p.bw_per_core[0]:>10.2f} "
           f"{p.bw_per_core[1]:>10.2f} {p.total_bw:>8.1f}")
 print("-> DCOPY (higher f) wins per-core share; total sags toward DCOPY's "
       "lower b_s (the Fig. 6 'bend').")
@@ -26,8 +31,11 @@ print("=" * 70)
 print("2. Fig. 9 gain/loss: who profits from co-scheduling?")
 print("=" * 70)
 for arch in table2.ARCHS:
-    g1 = sharing.gain_vs_self(table2.kernel("DAXPY"),
-                              table2.kernel("DSCAL"), arch, 4)
+    mixed = api.predict(api.Scenario.on(arch)
+                        .run("DAXPY", 4).run("DSCAL", 4))
+    homo = api.predict(api.Scenario.on(arch)
+                       .run("DAXPY", 4).run("DAXPY", 4))
+    g1 = mixed.bw_group[0] / homo.bw_group[0]
     print(f"  {arch:6s}: DAXPY paired with DSCAL -> {g1:.3f}x "
           f"({'gain' if g1 > 1 else 'loss'})")
 print("-> sign flips on Rome (f_DAXPY > f_DSCAL there) — paper Sect. V.")

@@ -1,34 +1,30 @@
 """HPCG desynchronization demo (paper Figs. 1 & 3), with rank timelines.
 
+The whole experiment is one declarative facade scenario: 20 MPI ranks,
+an exponential start jitter, the HPCG phase sequence, and a tail that
+either resynchronizes (allreduce) or amplifies skew (DAXPY).
+
 Run:  PYTHONPATH=src python examples/hpcg_desync_demo.py
 """
 
-import random
-
-from repro.core.desync import (Allreduce, DesyncSimulator, Idle, Work,
-                               durations_by_tag, skewness)
+from repro import api
 
 MB = 1e6
 N = 20
 
-
-def program(rng, tail):
-    return [
-        Idle(rng.expovariate(1 / 6e-5), tag="noise"),
-        Work("Schoenauer", 40 * MB, tag="symgs"),
-        Work("DDOT2", 8 * MB, tag="ddot2"),
-        *tail,
-    ]
+BASE = (api.Scenario.on("CLX").ranks(N)
+        .with_noise(6e-5, seed=7)
+        .step("Schoenauer", 40 * MB, tag="symgs")
+        .step("DDOT2", 8 * MB, tag="ddot2"))
 
 
-def run(tail, label):
-    rng = random.Random(7)
-    sim = DesyncSimulator([program(rng, tail) for _ in range(N)], "CLX")
-    recs = sim.run(t_max=60)
-    dd = durations_by_tag(recs, "ddot2", n_ranks=N)
+def run(scenario, label):
+    res = api.simulate(scenario, t_max=60)
+    dd = res.durations("ddot2")
+    recs = res.records()
     starts = {r.rank: r.start for r in recs if r.tag == "ddot2"}
     print(f"\n--- {label} ---")
-    print(f"DDOT2 accumulated-time skewness: {skewness(dd):+.2f}")
+    print(f"DDOT2 accumulated-time skewness: {res.skew('ddot2')[0]:+.2f}")
     order = sorted(range(N), key=lambda r: starts[r])
     t0 = min(starts.values())
     scale = 4e4
@@ -37,11 +33,12 @@ def run(tail, label):
         off = int((rec.start - t0) * scale)
         width = max(1, int(rec.duration * scale))
         print(f"  rank {r:2d} |{' ' * off}{'#' * width}")
+    return dd
 
 
-run([Allreduce(), Work("DAXPY", 30 * MB, tag="daxpy")],
+run(BASE.barrier().step("DAXPY", 30 * MB, tag="daxpy"),
     "Fig. 1: DDOT2 -> MPI_Allreduce  (late starters overlap idleness: "
     "RESYNC, negative skew)")
-run([Work("DAXPY", 30 * MB, tag="daxpy")],
+run(BASE.step("DAXPY", 30 * MB, tag="daxpy"),
     "Fig. 3b: DDOT2 -> DAXPY (higher-f follow-up steals bandwidth: "
     "DESYNC, positive skew)")

@@ -1,19 +1,22 @@
-"""Quickstart: the paper's bandwidth-sharing model in 40 lines.
+"""Quickstart: the paper's bandwidth-sharing model through the facade.
+
+Declare *what* runs (a Scenario); the library picks *how* to solve it.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
+from repro import api
 from repro.core import memsim, sharing, table2
 
 # Two kernels sharing a fully-populated 20-core Cascade Lake socket:
 # DCOPY on 12 cores, DDOT2 on 8.
-dcopy = table2.kernel("DCOPY")
-ddot2 = table2.kernel("DDOT2")
+scenario = api.Scenario.on("CLX").run("DCOPY", 12).run("DDOT2", 8)
 
-print(f"DCOPY : f={dcopy.f['CLX']:.3f}  b_s={dcopy.bs['CLX']:.1f} GB/s")
-print(f"DDOT2 : f={ddot2.f['CLX']:.3f}  b_s={ddot2.bs['CLX']:.1f} GB/s")
+for g in api.predict(scenario).groups:
+    print(f"{g.name:6s}: f={g.f:.3f}  b_s={g.bs:.1f} GB/s  "
+          f"[{g.provenance}]")
 
-pred = sharing.pair(dcopy, ddot2, "CLX", 12, 8)
+pred = api.predict(scenario)
 print(f"\nEq.4 mixed envelope : {pred.b_overlap:.1f} GB/s")
 print(f"Eq.5 request shares : alpha = {pred.alphas[0]:.3f} / "
       f"{pred.alphas[1]:.3f}")
@@ -22,6 +25,7 @@ print(f"per-core bandwidth  : DCOPY {pred.bw_per_core[0]:.2f}  "
 
 # Validate against the microscopic queue simulator (the stand-in for the
 # paper's LIKWID measurements).
+dcopy, ddot2 = table2.kernel("DCOPY"), table2.kernel("DDOT2")
 sim = memsim.simulate([sharing.Group.of(dcopy, "CLX", 12),
                        sharing.Group.of(ddot2, "CLX", 8)])
 print(f"queue simulator     : DCOPY {sim[0]/12:.2f}  DDOT2 {sim[1]/8:.2f} "
@@ -29,3 +33,8 @@ print(f"queue simulator     : DCOPY {sim[0]/12:.2f}  DDOT2 {sim[1]/8:.2f} "
 err = max(abs(sim[0] / 12 - pred.bw_per_core[0]) / pred.bw_per_core[0],
           abs(sim[1] / 8 - pred.bw_per_core[1]) / pred.bw_per_core[1])
 print(f"model error         : {err*100:.1f}%  (paper: < 8%)")
+
+# Every prediction exports to one machine-readable schema.
+print(f"\nas dict             : total_bw="
+      f"{pred.to_dict()['total_bw']:.1f} GB/s "
+      f"(schema v{pred.to_dict()['schema']})")

@@ -1,0 +1,49 @@
+"""The library's front door: declarative scenarios in, predictions out.
+
+The paper's pitch is radical simplicity — two numbers per kernel,
+``(f, b_s)``, predict any pairing — and this package is that simplicity
+as an API.  Callers state *what* (kernels, machine, placement, noise)::
+
+    from repro import api
+
+    pred = api.predict(api.Scenario.on("CLX")
+                       .run("DCOPY", 12).run("DDOT2", 8))
+    pred.bw_per_core          # per-core GB/s for each kernel
+
+and the library picks *how*: the scalar reference solver, the batched
+numpy solver, the jitted jax backend, or the desync event engine —
+see :mod:`repro.api.engine` for the dispatch table.
+
+Modules:
+  scenario — the frozen ``Scenario`` builder + ``ScenarioBatch`` sweeps
+  registry — one kernel-spec resolution chain (Table II name →
+             calibration → (f, bs) → ECM-from-loop-features) with
+             suggestion-bearing lookup errors
+  engine   — ``predict`` / ``simulate`` dispatch onto the core engines
+  results  — the unified ``Prediction`` / ``BatchPrediction`` /
+             ``SimulationResult`` schema with dict/ndjson export
+
+The pre-facade entry points (``sharing.predict``, ``solve_batch``,
+``topology.predict_placed``, ``DesyncSimulator``/``run_batch``,
+``calibrate.fit_scaling``) remain supported — they are the engines the
+facade dispatches to, and facade results are bit-for-bit theirs.
+"""
+
+from .engine import JAX_BATCH_CUTOFF, predict, simulate
+from .registry import (ResolvedSpec, from_loop_features, known_archs,
+                       known_kernels, resolve, suggest,
+                       unknown_key_error, unknown_key_message)
+from .results import (BatchPrediction, DomainShare, GroupShare, Prediction,
+                      SimulationResult, dump_ndjson, load_ndjson)
+from .scenario import (DEFAULT_WORK_BYTES, Noise, RunSpec, Scenario,
+                       ScenarioBatch, StepSpec)
+
+__all__ = [
+    "predict", "simulate", "JAX_BATCH_CUTOFF",
+    "Scenario", "ScenarioBatch", "RunSpec", "StepSpec", "Noise",
+    "DEFAULT_WORK_BYTES",
+    "resolve", "ResolvedSpec", "from_loop_features", "known_kernels",
+    "known_archs", "suggest", "unknown_key_error", "unknown_key_message",
+    "Prediction", "BatchPrediction", "SimulationResult", "GroupShare",
+    "DomainShare", "dump_ndjson", "load_ndjson",
+]

@@ -1,0 +1,198 @@
+"""One kernel-spec resolution chain for the whole library.
+
+Before the facade, every entry style re-implemented its own lookup:
+``sharing.Group.of`` indexed ``spec.f[arch]`` raw, the desync engines
+indexed a ``specs`` dict raw, the calibration pipeline built specs via
+``KernelSpec.from_calibration``, and the ECM route lived apart in
+``core.ecm``.  This module is the single resolver all of them share:
+
+    resolve(ref, arch=...)  ->  (KernelSpec, provenance)
+
+accepting, in order of the chain:
+
+1. a **Table II name** (``"DCOPY"``) — or a name in a caller-supplied
+   ``specs`` mapping (provenance ``"table2"`` / ``"custom"``);
+2. a ready **KernelSpec** (provenance ``"explicit"``, or ``"synthetic"``
+   for specs minted by :meth:`KernelSpec.synthetic`);
+3. a **calibration result** — a mapping with ``"f"``/``"bs"`` entries
+   whose values are floats, per-arch mappings, or
+   :class:`repro.calibrate.fit.CalibratedValue`-like objects (anything
+   with a ``.value``) — materialized through
+   :meth:`KernelSpec.from_calibration` (provenance ``"calibrated"``);
+4. an ``(f, bs)`` **pair** of floats — a synthetic one-off spec
+   (provenance ``"synthetic"``);
+5. **loop features** via :func:`from_loop_features` — stream counts +
+   flops, with ``f`` *predicted* by the ECM model instead of measured
+   (provenance ``"ecm"``).
+
+The provenance string travels into :class:`repro.api.results.Prediction`
+so every number in a result can be traced back to where its ``(f, b_s)``
+inputs came from.
+
+The module also owns the shared *unknown-key* error helper: a lookup
+miss anywhere in the library (kernel names, architectures, topology
+presets) raises a ``KeyError`` that lists the known keys and suggests
+the nearest name instead of echoing the bare key back.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import difflib
+from typing import Mapping, Sequence
+
+from ..core import ecm as ecm_model
+from ..core.machine import MachineModel
+from ..core.table2 import ARCHS, TABLE2, KernelSpec
+
+#: Provenance labels, in resolution-chain order.
+PROVENANCES = ("table2", "custom", "explicit", "synthetic", "calibrated",
+               "ecm")
+
+
+# ---------------------------------------------------------------------------
+# Unknown-key errors with suggestions (shared across the library)
+# ---------------------------------------------------------------------------
+
+
+def suggest(key: str, known: Sequence[str]) -> str | None:
+    """Nearest known key by edit similarity, or ``None`` when nothing is
+    close enough to be a plausible typo."""
+    matches = difflib.get_close_matches(str(key), list(known), n=1,
+                                        cutoff=0.5)
+    return matches[0] if matches else None
+
+
+def unknown_key_message(kind: str, key: str, known: Sequence[str]) -> str:
+    """Error text for a failed ``kind`` lookup: the bad key, the nearest
+    suggestion (if any), and the full sorted key list."""
+    known = sorted(known)
+    msg = f"unknown {kind} {key!r}"
+    near = suggest(key, known)
+    if near is not None:
+        msg += f"; did you mean {near!r}?"
+    msg += f" (known {kind}s: {known})"
+    return msg
+
+
+def unknown_key_error(kind: str, key: str,
+                      known: Sequence[str]) -> KeyError:
+    """A ``KeyError`` carrying :func:`unknown_key_message` — raise this
+    from every lookup miss so callers always see their options."""
+    return KeyError(unknown_key_message(kind, key, known))
+
+
+def known_kernels(specs: Mapping[str, KernelSpec] | None = None
+                  ) -> tuple[str, ...]:
+    return tuple(sorted(TABLE2 if specs is None else specs))
+
+
+def known_archs(spec: KernelSpec | None = None) -> tuple[str, ...]:
+    return tuple(ARCHS) if spec is None else tuple(sorted(spec.f))
+
+
+# ---------------------------------------------------------------------------
+# The resolution chain
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedSpec:
+    """A spec plus where it came from (the facade's provenance record)."""
+
+    spec: KernelSpec
+    provenance: str  # one of PROVENANCES
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+
+def _calibrated_mapping(name: str, ref: Mapping, arch: str | None
+                        ) -> ResolvedSpec:
+    """Chain step 3: a ``{"f": ..., "bs": ...}`` calibration result.
+    Values may be plain floats (then ``arch`` keys them), per-arch
+    mappings, or CalibratedValue-likes (``.value`` is used)."""
+
+    def per_arch(v):
+        if hasattr(v, "value"):            # CalibratedValue duck-type
+            v = v.value
+        if isinstance(v, Mapping):
+            return {a: (x.value if hasattr(x, "value") else float(x))
+                    for a, x in v.items()}
+        if arch is None:
+            raise ValueError(
+                f"calibrated spec {name!r} has scalar f/bs values; pass "
+                f"arch= so they can be keyed")
+        return {arch: float(v)}
+
+    spec = KernelSpec.from_calibration(
+        name, per_arch(ref["f"]), per_arch(ref["bs"]),
+        template=TABLE2.get(name))
+    return ResolvedSpec(spec=spec, provenance="calibrated")
+
+
+def resolve(ref, *, arch: str | None = None,
+            specs: Mapping[str, KernelSpec] | None = None,
+            name: str | None = None) -> ResolvedSpec:
+    """Resolve any accepted kernel reference to a (spec, provenance) pair.
+
+    ``arch`` (when given) is validated against the resolved spec's
+    architecture set, so resolution errors surface at *build* time with a
+    suggestion, not as a bare ``KeyError`` deep inside a solver.
+    ``specs`` overrides the Table II registry for name lookups (custom
+    phase dictionaries, calibrated tables).  ``name`` labels anonymous
+    refs (``(f, bs)`` pairs and calibration mappings).
+    """
+    if isinstance(ref, KernelSpec):
+        prov = "explicit"
+        if not ref.body and ref.name not in (specs or TABLE2):
+            prov = "synthetic"  # minted via KernelSpec.synthetic / (f, bs)
+        out = ResolvedSpec(spec=ref, provenance=prov)
+    elif isinstance(ref, str):
+        table = TABLE2 if specs is None else specs
+        if ref not in table:
+            raise unknown_key_error("kernel", ref, known_kernels(specs))
+        out = ResolvedSpec(spec=table[ref],
+                           provenance="table2" if specs is None
+                           else "custom")
+    elif isinstance(ref, Mapping) and "f" in ref and "bs" in ref:
+        out = _calibrated_mapping(name or str(ref.get("name", "cal")),
+                                  ref, arch)
+    elif isinstance(ref, tuple) and len(ref) == 2 \
+            and all(isinstance(x, (int, float)) for x in ref):
+        f, bs = float(ref[0]), float(ref[1])
+        out = ResolvedSpec(
+            spec=KernelSpec.synthetic(name or f"synthetic(f={f:g})", f, bs,
+                                      arch=arch or "TPU"),
+            provenance="synthetic")
+    else:
+        raise TypeError(
+            f"cannot resolve kernel reference {ref!r}: expected a Table II "
+            f"name, a KernelSpec, a {{'f': .., 'bs': ..}} calibration "
+            f"mapping, or an (f, bs) pair")
+    if arch is not None and arch not in out.spec.f:
+        raise unknown_key_error("architecture", arch,
+                                known_archs(out.spec))
+    return out
+
+
+def from_loop_features(name: str, *, reads: int, writes: int, rfo: int,
+                       flops_per_iter: float, machine: MachineModel,
+                       read_only: bool | None = None) -> ResolvedSpec:
+    """Chain step 5: build a spec from loop features alone, with ``f``
+    *predicted* by the ECM model (Eqs. 1–2) and ``b_s`` taken from the
+    machine's saturated-bandwidth class — the paper's "predicted using
+    the ECM model" route, no measurement required."""
+    if read_only is None:
+        read_only = writes == 0 and rfo == 0
+    proto = KernelSpec(name=name, body="", reads=reads, writes=writes,
+                       rfo=rfo, flops_per_iter=flops_per_iter,
+                       f={}, bs={}, read_only=read_only)
+    pred = ecm_model.predict(proto, machine)
+    bclass = "read_only" if read_only else "read_write"
+    spec = dataclasses.replace(
+        proto,
+        f={machine.name: pred.f},
+        bs={machine.name: machine.saturated_bw_gbs[bclass]})
+    return ResolvedSpec(spec=spec, provenance="ecm")

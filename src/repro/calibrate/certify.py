@@ -28,9 +28,13 @@ import json
 import time
 from typing import Sequence
 
+import numpy as np
+
+from ..api import ResolvedSpec, Scenario, ScenarioBatch
+from ..api import predict as api_predict
 from ..core.table2 import ARCHS, TABLE2, KernelSpec
 from .fit import (aggregate_ensemble, calibrated_specs, fit_scaling,
-                  fit_scaling_cell, predict_pairs)
+                  fit_scaling_cell)
 from .traces import DOMAIN_CORES, synthesize_ensemble, \
     synthesize_pair_trace
 
@@ -226,13 +230,22 @@ def certify(kernels: Sequence[str] | None = None,
         for k in kernels for a in archs]
 
     # 4. held-out paired shares: measured with *true* specs, predicted
-    # with *calibrated* specs — one batched Eq. 4–5 solve for all pairs.
+    # with *calibrated* specs — declared as one facade scenario batch and
+    # solved in one batched Eq. 4–5 call (same math as fit.predict_pairs,
+    # with the calibration provenance recorded on every group).
     held_out = _holdout_pairs(kernels, archs, pairs_per_arch, truth)
     pair_traces = [synthesize_pair_trace(ka, kb, arch, na, nb,
                                          seed=17 + i, n_events=n_events,
                                          specs=truth)
                    for i, (ka, kb, arch, na, nb) in enumerate(held_out)]
-    predicted = predict_pairs(cal, pair_traces, utilization=utilization)
+    labeled = {k: ResolvedSpec(spec=s, provenance="calibrated")
+               for k, s in cal.items()}
+    scens = [Scenario.on(pt.arch, utilization=utilization)
+             .run(labeled[pt.kernels[0]], pt.n[0])
+             .run(labeled[pt.kernels[1]], pt.n[1])
+             for pt in pair_traces]
+    predicted = (api_predict(ScenarioBatch.of(scens)).bw_group
+                 if scens else np.zeros((0, 2)))
     pair_errors = [PairError(
         kernels=pt.kernels, arch=pt.arch, n=pt.n,
         measured=pt.bandwidth,

@@ -58,6 +58,10 @@ class Group:
 
     @staticmethod
     def of(kernel: KernelSpec, arch: str, n: int) -> "Group":
+        if arch not in kernel.f or arch not in kernel.bs:
+            from ..api.registry import unknown_key_error
+            known = sorted(set(kernel.f) & set(kernel.bs))
+            raise unknown_key_error("architecture", arch, known)
         return Group(n=n, f=kernel.f[arch], bs=kernel.bs[arch],
                      name=kernel.name)
 

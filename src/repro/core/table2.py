@@ -216,6 +216,7 @@ def kernel(name: str) -> KernelSpec:
     try:
         return TABLE2[name]
     except KeyError:
-        raise KeyError(
-            f"unknown kernel {name!r}; available: {sorted(TABLE2)}"
-        ) from None
+        # Lazy import: the api facade sits above core, so core modules
+        # only reach for its shared error helper at raise time.
+        from ..api.registry import unknown_key_error
+        raise unknown_key_error("kernel", name, TABLE2) from None

@@ -311,5 +311,5 @@ def preset(name: str) -> Topology:
     try:
         return PRESETS[name]
     except KeyError:
-        raise KeyError(f"unknown topology preset {name!r}; available: "
-                       f"{sorted(PRESETS)}") from None
+        from ..api.registry import unknown_key_error
+        raise unknown_key_error("topology preset", name, PRESETS) from None

@@ -17,12 +17,11 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Sequence
 
+from ..api import Scenario, ScenarioBatch, simulate
 from ..configs.base import ModelConfig
-from ..core.desync import Allreduce, DesyncSimulator, Work, end_spread
 from ..core.hlo import RooflineTerms
 from ..core.machine import TPU_V5E, TpuModel
 from ..core.overlap import Phase, best_bucket_count, overlap_pair
-from ..core.table2 import KernelSpec
 from ..core.topology import Topology, tpu_pod
 
 
@@ -174,35 +173,28 @@ def evaluate_pod_plans(terms: RooflineTerms,
     # A lone Work group attains bw = f·b_s under the recursion law, so a
     # phase's simulated solo duration is hbm_bytes/(f·b_s) = t_solo — the
     # sim reproduces the roofline when nothing contends.
-    specs = {
-        ph.name: KernelSpec.synthetic(
-            ph.name, max(ph.request_fraction(tpu), 1e-6), tpu.hbm_bw_gbs)
-        for ph in (bwd, drain)
-    }
-    programs_batch = []
+    fbs = {ph.name: (max(ph.request_fraction(tpu), 1e-6), tpu.hbm_bw_gbs)
+           for ph in (bwd, drain)}
+    scens = []
     for load in candidate_loads:
-        progs = []
-        for scale in load:
-            prog = [Work("bwd", bwd.hbm_bytes * scale, tag="bwd"),
-                    Allreduce(cost_s=wire_s, tag="grad_ar")]
-            if drain.hbm_bytes > 0:
-                prog.append(Work("grad_drain", drain.hbm_bytes,
-                                 tag="grad_drain"))
-            progs.append(prog)
-        programs_batch.append(progs)
+        sc = (Scenario.on("TPU").ranks(len(chips))
+              .using(topo).on_domains(chips)
+              .step(fbs["bwd"], [bwd.hbm_bytes * s for s in load],
+                    name="bwd", tag="bwd")
+              .barrier(cost_s=wire_s, tag="grad_ar"))
+        if drain.hbm_bytes > 0:
+            sc = sc.step(fbs["grad_drain"], drain.hbm_bytes,
+                         name="grad_drain", tag="grad_drain")
+        scens.append(sc)
     # Plans are compared on t_step; a masked deadlocked candidate would
     # win with a bogus short step, so abort loudly instead.
-    res = DesyncSimulator.run_batch(
-        programs_batch, "TPU", specs, topology=topo, placement=chips,
-        t_max=1e6, backend=backend, on_deadlock="raise")
-    out = []
-    for b, load in enumerate(candidate_loads):
-        recs = res.records[b]
-        out.append(PodPlanEvaluation(
-            chip_load=load,
-            t_step=max((r.end for r in recs), default=0.0),
-            bwd_spread=end_spread(recs, "bwd")))
-    return out
+    res = simulate(ScenarioBatch.of(scens), t_max=1e6, backend=backend,
+                   on_deadlock="raise")
+    return [PodPlanEvaluation(
+        chip_load=load,
+        t_step=res.makespan(b),
+        bwd_spread=res.end_spread("bwd", b))
+        for b, load in enumerate(candidate_loads)]
 
 
 def best_pod_plan(terms: RooflineTerms,

@@ -17,7 +17,8 @@ import dataclasses
 from collections import deque
 from typing import Sequence
 
-from ..core.desync import DesyncSimulator, Idle, Work, skewness
+from ..api import Scenario, simulate
+from ..core.desync import skewness
 from ..core.topology import Topology
 
 
@@ -79,29 +80,22 @@ class StragglerMonitor:
         one HBM domain per chip of a :func:`repro.core.topology.tpu_pod`):
         workers only amplify each other's skew through domains they share.
         """
-        import random
         if ensemble < 1:
             raise ValueError(f"ensemble must be >= 1, got {ensemble}")
-        from ..core.table2 import KernelSpec
-        specs = {ph.name: KernelSpec.synthetic(ph.name, ph.f, ph.bs)
-                 for ph in phases}
-        progs_batch = []
-        for b in range(ensemble):
-            rng = random.Random(seed + b)
-            progs = []
-            for w in range(self.n_workers):
-                # One barrier-free iteration after established skew — the
-                # paper's Fig. 3 setting (multi-iteration feedback forms
-                # computational wavefronts that mix the signal).
-                prog = [Idle(rng.expovariate(1 / 5e-5), tag="noise")]
-                prog += [Work(ph.name, ph.bytes_hbm, tag=ph.name)
-                         for ph in phases]
-                progs.append(prog)
-            progs_batch.append(progs)
+        if (topology is None) != (placement is None):
+            raise ValueError("topology and placement must be given together")
+        # One barrier-free iteration after established skew — the paper's
+        # Fig. 3 setting (multi-iteration feedback forms computational
+        # wavefronts that mix the signal).
+        sc = Scenario.on("TPU").ranks(self.n_workers)
+        for ph in phases:
+            sc = sc.step((ph.f, ph.bs), ph.bytes_hbm, name=ph.name,
+                         tag=ph.name)
+        sc = sc.with_noise(5e-5, seed=seed, ensemble=ensemble)
+        if topology is not None:
+            sc = sc.using(topology).on_domains(placement)
         # A masked-out deadlocked draw would silently skew the ensemble
         # skew statistic, so abort loudly instead.
-        res = DesyncSimulator.run_batch(
-            progs_batch, "TPU", specs, topology=topology,
-            placement=placement, t_max=120.0, backend=backend,
-            on_deadlock="raise")
-        return float(res.skew_by_tag(phases[probe].name).mean())
+        res = simulate(sc, t_max=120.0, backend=backend,
+                       on_deadlock="raise")
+        return res.mean_skew(phases[probe].name)

@@ -1,0 +1,243 @@
+"""Property tests: the facade is bit-for-bit the engines it dispatches to.
+
+Acceptance gate of the facade PR: ``api.predict`` must match
+``sharing.predict`` (scalar), ``sharing.solve_batch`` (batched, both
+backends), and ``topology.predict_placed`` exactly — same floats, not
+approximately — on their native inputs, and ``api.simulate`` must
+reproduce ``desync_batch.run_batch`` record lists exactly.  Works with
+real hypothesis or the deterministic fallback shim.
+"""
+
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro import api
+from repro.core import sharing, table2, topology
+from repro.core.desync import Allreduce, Idle, WaitNeighbors, Work
+from repro.core.desync_batch import run_batch
+from repro.core.sharing import HAVE_JAX, Group
+
+BACKENDS = ["numpy"] + (["jax"] if HAVE_JAX else [])
+KERNELS = sorted(table2.TABLE2)
+UTILS = ["recursion", "queue", 0.7]
+
+kernel_names = st.sampled_from(KERNELS)
+archs = st.sampled_from(table2.ARCHS)
+utils = st.sampled_from(UTILS)
+counts = st.integers(min_value=0, max_value=12)
+
+
+def _scenario_from(arch, util, ks, ns):
+    sc = api.Scenario.on(arch).options(utilization=util)
+    for k, n in zip(ks, ns):
+        sc = sc.run(k, n)
+    return sc
+
+
+# ---------------------------------------------------------------------------
+# api.predict (scalar path) == sharing.predict
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=150, deadline=None)
+@given(arch=archs, util=utils,
+       ks=st.lists(kernel_names, min_size=1, max_size=5),
+       seed=st.integers(min_value=0, max_value=10**6))
+def test_scalar_predict_bit_for_bit(arch, util, ks, seed):
+    rng = random.Random(seed)
+    ns = [rng.randint(0, 12) for _ in ks]
+    groups = [Group.of(table2.kernel(k), arch, n) for k, n in zip(ks, ns)]
+    ref = sharing.predict(groups, utilization=util)
+    got = api.predict(_scenario_from(arch, util, ks, ns))
+    assert got.bw_group == ref.bw_group
+    assert got.alphas == ref.alphas
+    assert got.b_overlap == ref.b_overlap
+    assert got.bw_per_core == ref.bw_per_core
+    assert got.total_bw == ref.total_bw
+
+
+# ---------------------------------------------------------------------------
+# api.predict (batched path) == sharing.solve_batch, both backends
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(arch=archs, util=utils,
+       seed=st.integers(min_value=0, max_value=10**6),
+       b=st.integers(min_value=1, max_value=12))
+def test_batched_predict_bit_for_bit(arch, util, seed, b):
+    # Backends loop inside the test: the fallback hypothesis shim does
+    # not compose @given with @pytest.mark.parametrize.
+    rng = random.Random(seed)
+    scens, raw_scens = [], []
+    for _ in range(b):
+        g = rng.randint(1, 4)
+        ks = [rng.choice(KERNELS) for _ in range(g)]
+        ns = [rng.randint(0, 12) for _ in range(g)]
+        scens.append(_scenario_from(arch, util, ks, ns))
+        raw_scens.append([Group.of(table2.kernel(k), arch, n)
+                          for k, n in zip(ks, ns)])
+    for backend in BACKENDS:
+        got = api.predict(api.ScenarioBatch.of(scens), backend=backend)
+        ref = sharing.predict_batch(raw_scens, utilization=util,
+                                    backend=backend)
+        np.testing.assert_array_equal(got.bw_group, ref.bw_group)
+        np.testing.assert_array_equal(got.alphas, ref.alphas)
+        np.testing.assert_array_equal(got.b_overlap, ref.b_overlap)
+        np.testing.assert_array_equal(got.bw_per_core, ref.bw_per_core)
+
+
+def test_batched_predict_matches_scalar_rows():
+    """Facade batch rows materialize to exactly the facade scalar result
+    (the padding round trip keeps names, counts, and floats)."""
+    scens = [api.Scenario.on("CLX").run("DCOPY", 4),
+             api.Scenario.on("CLX").run("DDOT2", 3).run("DAXPY", 5)
+             .run("STREAM", 2)]
+    batch = api.predict(api.ScenarioBatch.of(scens), backend="numpy")
+    for i, sc in enumerate(scens):
+        ref = api.predict(sc)
+        assert batch[i].bw_group == ref.bw_group
+        assert [g.name for g in batch[i].groups] \
+            == [g.name for g in ref.groups]
+
+
+# ---------------------------------------------------------------------------
+# api.predict (placed) == topology.predict_placed
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(preset_name=st.sampled_from(["CLX-2S", "ROME-2S-NPS4",
+                                    "BDW-2-2S", "TPUv5e-pod4"]),
+       seed=st.integers(min_value=0, max_value=10**6),
+       util=utils)
+def test_placed_predict_bit_for_bit(preset_name, seed, util):
+    rng = random.Random(seed)
+    topo = topology.preset(preset_name)
+    arch = "CLX"
+    domains = topo.domain_names
+    sc = (api.Scenario.on(arch).using(topo)
+          .options(utilization=util, strict=False))
+    placements = []
+    for _ in range(rng.randint(1, 6)):
+        k = rng.choice(KERNELS)
+        n = rng.randint(1, 3)
+        dom = rng.choice(domains)
+        sc = sc.placed(k, n, dom)
+        placements.append(
+            topology.Placed(Group.of(table2.kernel(k), arch, n), dom))
+    ref = topology.predict_placed(topo, placements, strict=False,
+                                  utilization=util)
+    got = api.predict(sc)
+    assert got.bw_group == tuple(ref.bw_group)
+    assert got.total_bw == ref.total_bw
+    for name in domains:
+        assert got.domain_bw(name) == ref.domain_bw(name)
+
+
+def test_placed_predict_respects_strict_capacity():
+    sc = (api.Scenario.on("CLX").using("CLX")
+          .placed("DCOPY", 21, "CLX/d0"))
+    with pytest.raises(ValueError, match="overcommitted"):
+        api.predict(sc)
+
+
+# ---------------------------------------------------------------------------
+# api.simulate == desync_batch.run_batch
+# ---------------------------------------------------------------------------
+
+
+def _native_programs(arch, n_ranks, steps, noise, seeds):
+    """Build run_batch's native inputs the way the facade promises to."""
+    batch = []
+    for s in seeds:
+        rng = random.Random(s)
+        progs = []
+        draws = [rng.expovariate(1 / noise) for _ in range(n_ranks)]
+        for r in range(n_ranks):
+            prog = [Idle(draws[r], tag="noise")]
+            for item in steps:
+                prog.append(item if not isinstance(item, Work)
+                            else Work(item.kernel, item.bytes,
+                                      tag=item.tag))
+            progs.append(prog)
+        batch.append(progs)
+    return batch
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_simulate_program_mode_bit_for_bit(backend):
+    MB = 1e6
+    steps = [Work("Schoenauer", 8 * MB, tag="symgs"),
+             Work("DDOT2", 2 * MB, tag="ddot2"),
+             Allreduce(),
+             Work("DAXPY", 6 * MB, tag="daxpy")]
+    ref = run_batch(_native_programs("CLX", 6, steps, 6e-5, range(4)),
+                    "CLX", t_max=60.0, backend=backend)
+    sc = (api.Scenario.on("CLX").ranks(6)
+          .with_noise(6e-5, seed=0, ensemble=4)
+          .step("Schoenauer", 8 * MB, tag="symgs")
+          .step("DDOT2", 2 * MB, tag="ddot2")
+          .barrier()
+          .step("DAXPY", 6 * MB, tag="daxpy"))
+    got = api.simulate(sc, t_max=60.0, backend=backend)
+    assert got.raw.n_scenarios == ref.n_scenarios
+    for b in range(ref.n_scenarios):
+        assert got.records(b) == ref.records[b]
+    np.testing.assert_array_equal(got.raw.t_end, ref.t_end)
+
+
+def test_simulate_halo_bit_for_bit():
+    MB = 1e6
+    steps = [Work("DCOPY", 4 * MB, tag="copy"),
+             WaitNeighbors(),
+             Work("DDOT2", 2 * MB, tag="ddot2")]
+    ref = run_batch(_native_programs("CLX", 5, steps, 4e-5, range(3)),
+                    "CLX", t_max=60.0)
+    sc = (api.Scenario.on("CLX").ranks(5)
+          .with_noise(4e-5, seed=0, ensemble=3)
+          .step("DCOPY", 4 * MB, tag="copy")
+          .halo()
+          .step("DDOT2", 2 * MB, tag="ddot2"))
+    got = api.simulate(sc, t_max=60.0)
+    for b in range(3):
+        assert got.records(b) == ref.records[b]
+
+
+def test_simulate_placed_topology_bit_for_bit():
+    MB = 1e6
+    topo = topology.preset("CLX-2S")
+    placement = ["CLX/s0/d0", "CLX/s0/d0", "CLX/s1/d0", "CLX/s1/d0"]
+    progs = [[Work("DCOPY", 2 * MB, tag="DCOPY")],
+             [Work("DDOT2", 2 * MB, tag="DDOT2")],
+             [Work("DCOPY", 2 * MB, tag="DCOPY")],
+             [Work("DDOT2", 2 * MB, tag="DDOT2")]]
+    ref = run_batch([progs], "CLX", topology=topo, placement=placement,
+                    t_max=60.0)
+    sc = (api.Scenario.on("CLX").using(topo)
+          .run("DCOPY", 1, domain="CLX/s0/d0", bytes=2 * MB)
+          .run("DDOT2", 1, domain="CLX/s0/d0", bytes=2 * MB)
+          .run("DCOPY", 1, domain="CLX/s1/d0", bytes=2 * MB)
+          .run("DDOT2", 1, domain="CLX/s1/d0", bytes=2 * MB))
+    got = api.simulate(sc, t_max=60.0)
+    assert got.records(0) == ref.records[0]
+
+
+# ---------------------------------------------------------------------------
+# Export round trip under random scenarios
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(arch=archs, util=utils,
+       ks=st.lists(kernel_names, min_size=1, max_size=4),
+       seed=st.integers(min_value=0, max_value=10**6))
+def test_dict_round_trip_property(arch, util, ks, seed):
+    rng = random.Random(seed)
+    ns = [rng.randint(0, 9) for _ in ks]
+    p = api.predict(_scenario_from(arch, util, ks, ns))
+    assert api.Prediction.from_dict(p.to_dict()) == p
