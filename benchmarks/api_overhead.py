@@ -26,7 +26,7 @@ import numpy as np
 
 from repro import api
 from repro.core import sharing
-from repro.core.sharing import HAVE_JAX
+from repro.core.backend import HAVE_JAX
 
 B_SIZES = (1, 16, 64, 256)
 OVERHEAD_BOUND_B1 = 0.05     # < 5 % at B = 1 (the acceptance bound)

@@ -3,9 +3,16 @@
 Default output is ``name,us_per_call,derived`` CSV on stdout:
     PYTHONPATH=src python -m benchmarks.run [--only fig8]
 
-``--json`` instead aggregates every module's rows into one
-machine-readable report (optionally written to ``--out``):
+``--json`` aggregates every module's rows into one machine-readable
+report (optionally written to ``--out``); rows are consumed from a
+generator module by module, so the working set is one module's rows:
     PYTHONPATH=src python -m benchmarks.run --json --out report.json
+
+``--ndjson`` is the fully streaming form — one JSON line per row,
+written as it is produced through the facade's streaming writer
+(:func:`repro.api.dump_dicts`), nothing accumulated; the right mode
+when the row count is huge or a consumer tails the file live:
+    PYTHONPATH=src python -m benchmarks.run --ndjson --out report.ndjson
 """
 
 from __future__ import annotations
@@ -15,9 +22,11 @@ import json
 import sys
 import traceback
 
+from repro.api import dump_dicts
+
 from . import (api_overhead, calibrate_roundtrip, desync_scaling,
                fig6_full_domain, fig7_symmetric, fig8_error, fig9_pairings,
-               hpcg_desync, table2_kernels, tpu_overlap)
+               hpcg_desync, plan_overhead, table2_kernels, tpu_overlap)
 
 MODULES = {
     "table2": table2_kernels,
@@ -30,22 +39,21 @@ MODULES = {
     "desync_scaling": desync_scaling,
     "calibrate": calibrate_roundtrip,
     "api_overhead": api_overhead,
+    "plan_overhead": plan_overhead,
 }
 
 
-def collect(keys) -> tuple[dict[str, list[dict]], dict[str, str]]:
-    """Run the requested modules; returns (rows per module, failures)."""
-    results: dict[str, list[dict]] = {}
-    failures: dict[str, str] = {}
+def iter_rows(keys, failures: dict[str, str]):
+    """Yield ``(module_key, row_dict)`` as modules produce them; a
+    module that raises records its traceback in ``failures`` and the
+    stream moves on."""
     for key in keys:
         try:
-            results[key] = [
-                {"name": name, "us_per_call": round(us, 1),
-                 "derived": derived}
-                for name, us, derived in MODULES[key].rows()]
+            for name, us, derived in MODULES[key].rows():
+                yield key, {"name": name, "us_per_call": round(us, 1),
+                            "derived": derived}
         except Exception:  # noqa: BLE001
             failures[key] = traceback.format_exc(limit=1)
-    return results, failures
 
 
 def main() -> None:
@@ -53,14 +61,45 @@ def main() -> None:
     ap.add_argument("--only", choices=sorted(MODULES), default=None)
     ap.add_argument("--json", action="store_true",
                     help="emit one aggregated JSON report instead of CSV")
+    ap.add_argument("--ndjson", action="store_true",
+                    help="stream one JSON line per row as produced "
+                         "(never materializes the full row list)")
     ap.add_argument("--out", default=None,
-                    help="with --json: write the report here instead of "
+                    help="with --json/--ndjson: write here instead of "
                          "stdout")
     args = ap.parse_args()
     keys = [args.only] if args.only else list(MODULES)
 
+    if args.ndjson:
+        failures: dict[str, str] = {}
+        rows = ({"module": key, **row}
+                for key, row in iter_rows(keys, failures))
+        if args.out:
+            with open(args.out, "w") as fh:
+                n = dump_dicts(rows, fh)
+            print(f"wrote {args.out}  (rows={n}, "
+                  f"failures={len(failures)})")
+        else:
+            dump_dicts(rows, sys.stdout)
+        for key, tb in failures.items():
+            print(f"FAILED {key}: {tb}", file=sys.stderr)
+        if failures:
+            sys.exit(1)
+        return
+
     if args.json:
-        results, failures = collect(keys)
+        # Modules are atomic in the aggregate report: a module that
+        # fails mid-iteration contributes its traceback, never a
+        # partial row set that could be mistaken for real results.
+        failures = {}
+        results: dict[str, list[dict]] = {}
+        for key in keys:
+            module_failures: dict[str, str] = {}
+            rows = [row for _, row in iter_rows([key], module_failures)]
+            if module_failures:
+                failures.update(module_failures)
+            else:
+                results[key] = rows
         report = {
             "benchmark": "benchmarks.run",
             "modules": results,
@@ -81,15 +120,12 @@ def main() -> None:
         return
 
     print("name,us_per_call,derived")
-    failures = 0
-    for key in keys:
-        try:
-            for name, us, derived in MODULES[key].rows():
-                print(f"{name},{us:.1f},{derived}")
-            sys.stdout.flush()
-        except Exception:  # noqa: BLE001
-            failures += 1
-            print(f"{key}/ERROR,0.0,{traceback.format_exc(limit=1)!r}")
+    failures = {}
+    for key, row in iter_rows(keys, failures):
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+        sys.stdout.flush()
+    for key, tb in failures.items():
+        print(f"{key}/ERROR,0.0,{tb!r}")
     if failures:
         sys.exit(1)
 

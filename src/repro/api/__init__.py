@@ -12,16 +12,24 @@ as an API.  Callers state *what* (kernels, machine, placement, noise)::
 
 and the library picks *how*: the scalar reference solver, the batched
 numpy solver, the jitted jax backend, or the desync event engine —
-see :mod:`repro.api.engine` for the dispatch table.
+see :mod:`repro.api.engine` for the dispatch table.  Callers that
+evaluate the same structure repeatedly compile a *plan* instead::
+
+    plan = api.compile(batch)     # trace once: pack, resolve, select jit
+    plan.run()                    # bit-for-bit api.predict(batch)
+    plan.run(f=f2, b_s=bs2)       # new numbers, no re-trace
 
 Modules:
   scenario — the frozen ``Scenario`` builder + ``ScenarioBatch`` sweeps
   registry — one kernel-spec resolution chain (Table II name →
              calibration → (f, bs) → ECM-from-loop-features) with
              suggestion-bearing lookup errors
-  engine   — ``predict`` / ``simulate`` dispatch onto the core engines
+  plan     — ``compile``/``Plan.run``: the two-phase API the verbs
+             are sugar over (docs/plans.md)
+  engine   — ``predict`` / ``simulate`` one-shot sugar
   results  — the unified ``Prediction`` / ``BatchPrediction`` /
              ``SimulationResult`` schema with dict/ndjson export
+             (streaming included)
 
 The pre-facade entry points (``sharing.predict``, ``solve_batch``,
 ``topology.predict_placed``, ``DesyncSimulator``/``run_batch``,
@@ -30,20 +38,26 @@ facade dispatches to, and facade results are bit-for-bit theirs.
 """
 
 from .engine import JAX_BATCH_CUTOFF, predict, simulate
+from .plan import (BatchPlan, PlacedPlan, Plan, ScalarPlan, SimulatePlan,
+                   compile, derive_member_seed)
 from .registry import (ResolvedSpec, from_loop_features, known_archs,
                        known_kernels, resolve, suggest,
                        unknown_key_error, unknown_key_message)
 from .results import (BatchPrediction, DomainShare, GroupShare, Prediction,
-                      SimulationResult, dump_ndjson, load_ndjson)
+                      SimulationResult, dump_dicts, dump_ndjson,
+                      iter_ndjson, load_ndjson)
 from .scenario import (DEFAULT_WORK_BYTES, Noise, RunSpec, Scenario,
                        ScenarioBatch, StepSpec)
 
 __all__ = [
     "predict", "simulate", "JAX_BATCH_CUTOFF",
+    "compile", "Plan", "ScalarPlan", "PlacedPlan", "BatchPlan",
+    "SimulatePlan", "derive_member_seed",
     "Scenario", "ScenarioBatch", "RunSpec", "StepSpec", "Noise",
     "DEFAULT_WORK_BYTES",
     "resolve", "ResolvedSpec", "from_loop_features", "known_kernels",
     "known_archs", "suggest", "unknown_key_error", "unknown_key_message",
     "Prediction", "BatchPrediction", "SimulationResult", "GroupShare",
-    "DomainShare", "dump_ndjson", "load_ndjson",
+    "DomainShare", "dump_ndjson", "iter_ndjson", "dump_dicts",
+    "load_ndjson",
 ]

@@ -1,190 +1,68 @@
-"""The facade's two verbs: ``predict(scenario)`` and ``simulate(scenario)``.
+"""The facade's one-shot verbs: ``predict(scenario)`` and
+``simulate(scenario)``.
 
-Callers declare *what* (a :class:`repro.api.scenario.Scenario` or
-:class:`ScenarioBatch`); this module picks *how*:
+Both are sugar over the two-phase plan API (:mod:`repro.api.plan`):
+``predict(x)`` is ``compile(x, verb="predict").run()`` and
+``simulate(x)`` is ``compile(x, verb="simulate").run(...)`` — one trace,
+one run, results bit-for-bit identical to the compiled path (that
+equivalence is a tested invariant).  Callers that evaluate the same
+structure repeatedly — sweeps, calibration inner loops, pod-plan
+searches — should hold the plan and call ``run`` themselves.
+
+The dispatch table (chosen at compile time, see
+:func:`repro.api.plan.compile`):
 
 =====================  =====================================================
 scenario shape          engine
 =====================  =====================================================
 single, unplaced        scalar reference path (``sharing.predict``)
 single, placed          topology solver (``topology.predict_placed``)
-batch, B < 64           batched numpy solver (``sharing.solve_batch``)
-batch, B >= 64          jitted jax solver, when importable (else numpy)
+batch                   batched array solver (``sharing.solve_arrays``) —
+                        numpy, or the substrate's cached jitted jax solver
+                        when importable and B is at least the configured
+                        cutoff (``REPRO_JAX_CUTOFF`` / ``jax_cutoff=``)
 any, ``simulate``       batched desync event engine
-                        (``desync_batch.run_batch``; numpy reference or
-                        jitted ``lax.while_loop`` on request)
+                        (``desync_batch.run_encoded``; numpy reference or
+                        the cached jitted ``lax.while_loop`` on request)
 =====================  =====================================================
 
 The old module-level entry points stay exactly as they are — they *are*
 the engines — so the facade adds dispatch and a uniform result schema
-(:mod:`repro.api.results`), never a second implementation: a facade
-prediction is bit-for-bit what the underlying engine returns.
+(:mod:`repro.api.results`), never a second implementation.  Backend
+resolution itself lives in one place for the whole tree:
+:func:`repro.core.backend.resolve`.
 """
 
 from __future__ import annotations
 
-import random
-from typing import Sequence
-
-from ..core import desync_batch, sharing, topology as topology_mod
-from ..core.desync import Allreduce, Idle, Item, WaitNeighbors, Work
-from ..core.sharing import HAVE_JAX
-from ..core.table2 import KernelSpec
-from .results import (BatchPrediction, Prediction, SimulationResult,
-                      from_share_prediction, from_topology_prediction)
+from ..core import backend as backend_mod
+from .plan import compile as compile_plan
+from .results import BatchPrediction, Prediction, SimulationResult
 from .scenario import Scenario, ScenarioBatch
 
-#: Batches at least this large dispatch to the jitted jax solver (when
-#: importable) under ``backend="auto"``: below it, jit dispatch overhead
-#: outweighs the vmap win (see BENCH_api.json).
-JAX_BATCH_CUTOFF = 64
-
-
-def _batch_backend(batch: ScenarioBatch, override: str | None) -> str:
-    backend = override or batch.scenarios[0].backend
-    if backend == "auto":
-        return "jax" if (HAVE_JAX and len(batch) >= JAX_BATCH_CUTOFF) \
-            else "numpy"
-    return backend
+#: Default ``backend="auto"`` jax cutoff (see
+#: :data:`repro.core.backend.DEFAULT_JAX_CUTOFF`).  Kept here as the
+#: facade-level alias; the effective value honors the
+#: ``REPRO_JAX_CUTOFF`` environment variable and per-call
+#: ``jax_cutoff=`` overrides.
+JAX_BATCH_CUTOFF = backend_mod.DEFAULT_JAX_CUTOFF
 
 
 def predict(scenario: Scenario | ScenarioBatch, *,
-            backend: str | None = None) -> Prediction | BatchPrediction:
+            backend: str | None = None,
+            jax_cutoff: int | None = None
+            ) -> Prediction | BatchPrediction:
     """Solve the sharing model (Eqs. 4–5) for a scenario or batch.
 
-    Dispatches per the table in the module doc; ``backend`` overrides the
-    scenario's own backend option (``"numpy"`` / ``"jax"`` / ``"auto"``).
-    Returns a :class:`Prediction` for a single scenario, a
+    One-shot sugar for ``compile(scenario, verb="predict").run(...)``.
+    ``backend`` overrides the scenario's own backend option
+    (``"numpy"`` / ``"jax"`` / ``"auto"``); ``jax_cutoff`` overrides
+    the ``auto`` threshold for this call.  Returns a
+    :class:`Prediction` for a single scenario, a
     :class:`BatchPrediction` for a batch.
     """
-    if isinstance(scenario, ScenarioBatch):
-        return _predict_batch(scenario, backend)
-    if not isinstance(scenario, Scenario):
-        raise TypeError(
-            f"predict() takes a Scenario or ScenarioBatch, got "
-            f"{type(scenario).__name__}")
-    if scenario.steps:
-        raise ValueError(
-            "this scenario describes rank programs (.step); use "
-            "simulate(scenario) for the event engine, or .run groups "
-            "for predict()")
-    if scenario.is_placed or scenario.topo is not None:
-        return _predict_placed(scenario, backend)
-    pred = sharing.predict(scenario.groups, **scenario.solver_options())
-    return from_share_prediction(pred, arch=scenario.arch,
-                                 provenance=scenario.provenance,
-                                 engine="scalar")
-
-
-def _predict_placed(scenario: Scenario, backend: str | None) -> Prediction:
-    if scenario.topo is None:
-        raise ValueError(
-            "scenario has .placed groups but no topology; add "
-            ".using(<topology or preset name>)")
-    missing = [r.tag for r in scenario.runs if r.domain is None]
-    if missing:
-        raise ValueError(
-            f"groups {missing} have no domain but the scenario has a "
-            f"topology; place every group with .placed(kernel, n, domain)")
-    placements = [topology_mod.Placed(r.group(scenario.arch), r.domain)
-                  for r in scenario.runs]
-    kwargs = scenario.solver_options()
-    kwargs["backend"] = backend or scenario.backend
-    kwargs["strict"] = scenario.strict
-    pred = topology_mod.predict_placed(scenario.topo, placements, **kwargs)
-    return from_topology_prediction(pred, arch=scenario.arch,
-                                    provenance=scenario.provenance)
-
-
-def _predict_batch(batch: ScenarioBatch,
-                   backend: str | None) -> BatchPrediction:
-    batch.predictable  # cached O(B) validation; raises on misuse
-    resolved = _batch_backend(batch, backend)
-    n, f, bs, names = batch.arrays
-    raw = sharing.solve_batch(n, f, bs, names=names, backend=resolved,
-                              **batch.scenarios[0].solver_options())
-    return BatchPrediction(archs=batch.archs, engine=resolved,
-                           raw=raw, provenance=batch.provenance)
-
-
-# ---------------------------------------------------------------------------
-# simulate
-# ---------------------------------------------------------------------------
-
-
-def _noise_items(scenario: Scenario, member: int,
-                 R: int) -> list[Item | None]:
-    """Per-rank leading Idle items for ensemble member ``member`` — drawn
-    in rank order from ``Random(seed + member)``, the convention every
-    pre-facade consumer (straggler monitor, HPCG study) used, so
-    migrated callers reproduce their histories bit-for-bit."""
-    noise = scenario.noise
-    if noise is None:
-        return [None] * R
-    rng = random.Random(noise.seed + member)
-    return [Idle(rng.expovariate(1.0 / noise.exp_mean_s), tag=noise.tag)
-            for _ in range(R)]
-
-
-def _programs_for(scenario: Scenario, member: int
-                  ) -> tuple[list[list[Item]], Sequence[str] | None]:
-    """One ensemble member's per-rank programs + placement."""
-    if scenario.steps:
-        R = scenario.n_ranks
-        if R is None:
-            raise ValueError("program-mode scenario never called .ranks(R)")
-        lead = _noise_items(scenario, member, R)
-        progs: list[list[Item]] = []
-        for r in range(R):
-            prog: list[Item] = [lead[r]] if lead[r] is not None else []
-            for s in scenario.steps:
-                if s.kind == "work":
-                    prog.append(Work(s.resolved.name, s.bytes_for(r),
-                                     tag=s.tag))
-                elif s.kind == "barrier":
-                    prog.append(Allreduce(cost_s=s.cost_s, tag=s.tag))
-                elif s.kind == "halo":
-                    prog.append(WaitNeighbors(cost_s=s.cost_s, tag=s.tag))
-                else:
-                    prog.append(Idle(s.cost_s, tag=s.tag))
-            progs.append(prog)
-        return progs, scenario.rank_domains
-    # Group mode: each run contributes n ranks, one Work each.
-    if not scenario.runs:
-        raise ValueError("nothing to simulate: scenario has no groups or "
-                         "steps")
-    R = scenario.total_threads
-    lead = _noise_items(scenario, member, R)
-    progs = []
-    placement: list[str] = []
-    r = 0
-    for run in scenario.runs:
-        for _ in range(run.n):
-            prog = [lead[r]] if lead[r] is not None else []
-            prog.append(Work(run.resolved.name, run.bytes, tag=run.tag))
-            progs.append(prog)
-            placement.append(run.domain or "")
-            r += 1
-    has_domains = any(placement)
-    if has_domains and not all(placement):
-        raise ValueError(
-            "either every group or no group must be placed on a domain")
-    return progs, (tuple(placement) if has_domains else None)
-
-
-def _collect_specs(scenarios: Sequence[Scenario]) -> dict[str, KernelSpec]:
-    specs: dict[str, KernelSpec] = {}
-    for sc in scenarios:
-        for res in ([s.resolved for s in sc.steps if s.resolved is not None]
-                    + [r.resolved for r in sc.runs]):
-            prev = specs.get(res.name)
-            if prev is not None and prev is not res.spec \
-                    and prev != res.spec:
-                raise ValueError(
-                    f"two different specs named {res.name!r} in one "
-                    f"simulation batch")
-            specs[res.name] = res.spec
-    return specs
+    return compile_plan(scenario, verb="predict").run(
+        backend=backend, jax_cutoff=jax_cutoff)
 
 
 def simulate(scenario: Scenario | ScenarioBatch, *,
@@ -192,72 +70,16 @@ def simulate(scenario: Scenario | ScenarioBatch, *,
              on_deadlock: str = "mask") -> SimulationResult:
     """Run a scenario (or batch) through the desync event engine.
 
+    One-shot sugar for ``compile(scenario, verb="simulate").run(...)``.
     A single scenario with ``.with_noise(..., ensemble=B)`` expands to B
-    independent noise draws; a :class:`ScenarioBatch` simulates its B
-    scenarios (each contributing one member — candidate plans, phase
-    mixes).  All members advance in **one**
-    :func:`repro.core.desync_batch.run_batch` call.
+    independent noise draws (member seeds derived deterministically from
+    the scenario's seed via :func:`repro.api.plan.derive_member_seed`);
+    a :class:`ScenarioBatch` simulates its B scenarios.  All members
+    advance in **one** batched engine call.
 
     ``backend`` (``"numpy"`` default / ``"jax"``) and ``t_max`` override
     the scenarios' options; ``on_deadlock`` is the batched engine's
     masking contract (``"mask"`` or ``"raise"``).
     """
-    if isinstance(scenario, Scenario):
-        members = [(scenario, b)
-                   for b in range(scenario.noise.ensemble
-                                  if scenario.noise else 1)]
-        scenarios = [scenario]
-    elif isinstance(scenario, ScenarioBatch):
-        scenarios = list(scenario.scenarios)
-        for i, sc in enumerate(scenarios):
-            if sc.noise is not None and sc.noise.ensemble != 1:
-                raise ValueError(
-                    f"scenario {i} asks for a noise ensemble inside a "
-                    f"ScenarioBatch; ensembles are for single-scenario "
-                    f"simulate()")
-        members = [(sc, 0) for sc in scenarios]
-    else:
-        raise TypeError(
-            f"simulate() takes a Scenario or ScenarioBatch, got "
-            f"{type(scenario).__name__}")
-
-    first = scenarios[0]
-    programs_batch = []
-    placement0: Sequence[str] | None = None
-    for i, (sc, member) in enumerate(members):
-        if sc.arch != first.arch:
-            raise ValueError("all simulated scenarios must share one arch")
-        if t_max is None and sc.t_max != first.t_max:
-            raise ValueError(
-                f"scenario {i} sets t_max={sc.t_max} but scenario 0 "
-                f"sets {first.t_max}; a batch runs on one clock horizon "
-                f"(or pass t_max= to simulate() explicitly)")
-        if sc.topo != first.topo:
-            raise ValueError(
-                f"scenario {i} uses a different topology than "
-                f"scenario 0; a batch shares one topology")
-        progs, placement = _programs_for(sc, member)
-        if i == 0:
-            placement0 = placement
-        elif placement != placement0:
-            raise ValueError(
-                "all simulated scenarios must share one placement")
-        programs_batch.append(progs)
-
-    topo = first.topo
-    if placement0 is not None and topo is None:
-        raise ValueError(
-            "scenario places ranks on domains but has no topology; add "
-            ".using(<topology or preset name>)")
-    if topo is not None and placement0 is None:
-        topo = None  # unplaced scenario on a topology: single shared domain
-
-    resolved_backend = backend or ("numpy" if first.backend == "auto"
-                                   else first.backend)
-    res = desync_batch.run_batch(
-        programs_batch, first.arch, _collect_specs(scenarios),
-        topology=topo, placement=placement0,
-        t_max=t_max if t_max is not None else first.t_max,
-        backend=resolved_backend, on_deadlock=on_deadlock)
-    return SimulationResult(arch=first.arch,
-                            engine=f"desync-{resolved_backend}", raw=res)
+    return compile_plan(scenario, verb="simulate").run(
+        backend=backend, t_max=t_max, on_deadlock=on_deadlock)

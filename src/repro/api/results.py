@@ -238,8 +238,15 @@ class BatchPrediction:
     def __iter__(self):
         return (self[i] for i in range(len(self)))
 
+    def iter_dicts(self):
+        """Lazily yield one export dict per scenario — a
+        million-scenario batch streams through one row of working set
+        instead of one giant list (the ndjson writers are built on
+        this)."""
+        return (self[i].to_dict() for i in range(len(self)))
+
     def to_dicts(self) -> list[dict]:
-        return [p.to_dict() for p in self]
+        return list(self.iter_dicts())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -312,17 +319,39 @@ class SimulationResult:
 # ---------------------------------------------------------------------------
 
 
+def iter_ndjson(results: Iterable[Prediction | BatchPrediction]
+                ) -> "Iterable[str]":
+    """Lazily yield one serialized JSON line per *scenario* (batches
+    are flattened through :meth:`BatchPrediction.iter_dicts`, one row
+    of working set at a time) — the streaming half of
+    :func:`dump_ndjson`, for callers that pipe lines elsewhere."""
+    for res in results:
+        rows = res.iter_dicts() \
+            if isinstance(res, BatchPrediction) else [res.to_dict()]
+        for row in rows:
+            yield json.dumps(row, sort_keys=True)
+
+
+def dump_dicts(rows: Iterable[Mapping], fh: IO[str]) -> int:
+    """Stream arbitrary dict records as ndjson lines (one write per
+    record, nothing accumulated).  Returns the line count.  The
+    benchmark driver's ``--ndjson`` mode uses this."""
+    n = 0
+    for row in rows:
+        fh.write(json.dumps(row, sort_keys=True) + "\n")
+        n += 1
+    return n
+
+
 def dump_ndjson(results: Iterable[Prediction | BatchPrediction],
                 fh: IO[str]) -> int:
-    """Write one JSON line per *scenario* (batches are flattened).
-    Returns the number of lines written."""
+    """Write one JSON line per *scenario* (batches are flattened and
+    streamed row by row — a million-scenario batch never materializes
+    one giant list).  Returns the number of lines written."""
     n = 0
-    for res in results:
-        rows = res.to_dicts() if isinstance(res, BatchPrediction) \
-            else [res.to_dict()]
-        for row in rows:
-            fh.write(json.dumps(row, sort_keys=True) + "\n")
-            n += 1
+    for line in iter_ndjson(results):
+        fh.write(line + "\n")
+        n += 1
     return n
 
 

@@ -33,7 +33,9 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from ..core.sharing import HAVE_JAX, solve_batch, utilization_curve
+from ..core import backend as backend_mod
+from ..core.backend import HAVE_JAX
+from ..core.sharing import solve_batch, utilization_curve
 from ..core.table2 import TABLE2, KernelSpec
 from .traces import PairTrace, ScalingTrace, TraceSet
 
@@ -207,34 +209,59 @@ if HAVE_JAX:
         rss_hat, bs_hat = rss_at(f_hat)
         return f_hat, bs_hat, rss_hat
 
-    @functools.lru_cache(maxsize=None)
-    def _jax_fit(mode: str):
-        vmapped = jax.vmap(functools.partial(_fit_single_jax, mode=mode),
-                           in_axes=(0, 0, 0, None, None, None))
-        return jax.jit(vmapped, static_argnums=(5,))
+    def _build_jax_fit(mode: str, n_max: int):
+        """Jitted vmap of the per-cell fit for one shape bucket;
+        registered in the substrate's process-wide solver cache."""
+        vmapped = jax.vmap(
+            functools.partial(_fit_single_jax, mode=mode, n_max=n_max),
+            in_axes=(0, 0, 0, None, None))
+        return jax.jit(vmapped)
 
     def _fit_cells_jax(n, y, mask, f_grid, utilization, p0_factor):
-        n_max = int(n.max()) if n.size else 0
-        fitter = _jax_fit(utilization)
+        C, N = n.shape
+        # Only the recursion law compiles an n-dependent loop; the queue
+        # law shares one executable per (C, N, F) bucket.
+        n_max = int(n.max()) if (n.size and utilization == "recursion") \
+            else 0
+        n_max_b = backend_mod.bucket(n_max) if n_max else 0
+        Cb = backend_mod.bucket(C)
+        fitter = backend_mod.jitted(
+            ("calibrate.fit_scaling", utilization, Cb, N, len(f_grid),
+             n_max_b),
+            lambda: _build_jax_fit(utilization, n_max_b))
         with jax.experimental.enable_x64():
-            out = fitter(jnp.asarray(n, jnp.float64),
-                         jnp.asarray(y, jnp.float64),
-                         jnp.asarray(mask),
-                         jnp.asarray(f_grid, jnp.float64),
-                         jnp.float64(p0_factor), n_max)
-        return tuple(np.asarray(x) for x in out)
+            # Padded cells are all-masked: their fit runs on zeros and
+            # is sliced off below, so real cells are bit-for-bit the
+            # unpadded pass.
+            out = fitter(
+                jnp.asarray(backend_mod.pad_rows(
+                    np.asarray(n, np.float64), Cb), jnp.float64),
+                jnp.asarray(backend_mod.pad_rows(
+                    np.asarray(y, np.float64), Cb), jnp.float64),
+                jnp.asarray(backend_mod.pad_rows(
+                    np.asarray(mask, bool), Cb)),
+                jnp.asarray(f_grid, jnp.float64),
+                jnp.float64(p0_factor))
+        return tuple(np.asarray(x)[:C] for x in out)
 
 
 def fit_scaling(traces: TraceSet | Sequence[ScalingTrace], *,
                 utilization: str = "queue",
                 f_grid: np.ndarray | None = None, p0_factor: float = 0.5,
-                backend: str = "auto") -> ScalingFit:
+                backend: str = "auto",
+                jax_cutoff: int | None = None) -> ScalingFit:
     """Fit ``(f, b_s)`` for every scaling trace in one batched pass.
 
     ``utilization`` must match the instrument that produced the traces:
     ``"queue"`` for memsim-generated curves (and idealized interfaces),
     ``"recursion"`` for real-hardware measurements with a soft knee.
-    ``backend``: ``"numpy"``, ``"jax"`` (vmapped + jitted), or ``"auto"``.
+    ``backend``: ``"numpy"``, ``"jax"`` (vmapped + jitted), or ``"auto"``
+    — resolved by the substrate (:func:`repro.core.backend.resolve`)
+    against the number of cells, honoring ``REPRO_JAX_CUTOFF`` / the
+    ``jax_cutoff`` override like every batched path.  The jitted fit
+    kernel — grid profile plus the golden-section refinement — is one
+    compiled plan per (cell-bucket, law) in the substrate's cache, so
+    repeated fits of same-shaped trace sets skip recompilation.
     """
     if not isinstance(traces, TraceSet):
         traces = TraceSet(scaling=tuple(traces))
@@ -246,19 +273,14 @@ def fit_scaling(traces: TraceSet | Sequence[ScalingTrace], *,
         raise ValueError(f"unknown utilization mode {utilization!r}")
     f_grid = DEFAULT_F_GRID if f_grid is None else np.asarray(f_grid)
     n, y, mask, tr = traces.to_arrays()
-    if backend == "auto":
-        backend = "jax" if HAVE_JAX else "numpy"
+    backend = backend_mod.resolve(backend, n.shape[0],
+                                  jax_cutoff=jax_cutoff)
     if backend == "jax":
-        if not HAVE_JAX:
-            raise RuntimeError("backend='jax' requested but jax is not "
-                               "importable")
         f_hat, bs_hat, rss = _fit_cells_jax(n, y, mask, f_grid,
                                             utilization, p0_factor)
-    elif backend == "numpy":
+    else:
         f_hat, bs_hat, rss = _fit_cells_np(n, y, mask, f_grid,
                                            utilization, p0_factor)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
     return ScalingFit(f=f_hat, bs=bs_hat, rss=rss, traces=tuple(tr),
                       utilization=utilization, backend=backend)
 

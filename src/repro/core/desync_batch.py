@@ -38,9 +38,11 @@ from typing import Sequence
 
 import numpy as np
 
+from . import backend as backend_mod
+from .backend import HAVE_JAX
 from .desync import (EPS, Allreduce, Idle, Item, Record, WaitNeighbors,
                      Work, durations_by_tag, skewness)
-from .sharing import HAVE_JAX, solve_batch
+from .sharing import solve_batch
 from .table2 import TABLE2, KernelSpec
 from .topology import Topology
 
@@ -223,15 +225,32 @@ def run_batch(programs_batch: Sequence[Sequence[Sequence[Item]]], arch: str,
     downstream statistics would be silently skewed by a missing scenario
     opt into this).
     """
-    if on_deadlock not in ("mask", "raise"):
-        raise ValueError(f"unknown on_deadlock mode {on_deadlock!r}")
     specs = dict(TABLE2 if specs is None else specs)
     programs_batch = [list(sc) for sc in programs_batch]
     if not programs_batch:
+        if on_deadlock not in ("mask", "raise"):
+            raise ValueError(f"unknown on_deadlock mode {on_deadlock!r}")
         return BatchRunResult(records=[], start=np.zeros((0, 0, 1)),
                               end=np.zeros((0, 0, 1)), t_end=np.zeros(0),
-                              n_steps=0, backend=backend,
+                              n_steps=0,
+                              backend=backend_mod.resolve(
+                                  backend, 0, prefer="numpy"),
                               failed=np.zeros(0, dtype=bool))
+    placement = validate_batch(programs_batch, topology, placement)
+    enc = _encode(programs_batch, specs)
+    return run_encoded(enc, arch, specs, placement=placement, t_max=t_max,
+                       backend=backend, on_deadlock=on_deadlock)
+
+
+def validate_batch(programs_batch: Sequence[Sequence[Sequence[Item]]],
+                   topology: Topology | None,
+                   placement: Sequence[str] | None) -> tuple[str, ...]:
+    """Shared input validation for :func:`run_batch` and the compiled
+    plans (:mod:`repro.api.plan`): the batch must be rectangular,
+    topology and placement come together, and every placed domain must
+    exist.  Returns the normalized placement (the anonymous single
+    domain when unplaced) — the one contract both entry paths enforce,
+    so a rule added here applies to both."""
     n_ranks = len(programs_batch[0])
     for b, sc in enumerate(programs_batch):
         if len(sc) != n_ranks:
@@ -247,17 +266,33 @@ def run_batch(programs_batch: Sequence[Sequence[Sequence[Item]]], arch: str,
                 f"{n_ranks} ranks")
         for dom in placement:
             topology.domain(dom)
-    placement = (tuple(placement) if placement is not None
-                 else ("domain0",) * n_ranks)
-    enc = _encode(programs_batch, specs)
-    if backend == "numpy":
+    return (tuple(placement) if placement is not None
+            else ("domain0",) * n_ranks)
+
+
+def run_encoded(enc: _Encoded, arch: str,
+                specs: dict[str, KernelSpec], *,
+                placement: Sequence[str], t_max: float = 10.0,
+                backend: str = "numpy",
+                on_deadlock: str = "mask") -> BatchRunResult:
+    """Run an already-encoded program batch (the compiled-plan entry).
+
+    :func:`run_batch` validates, encodes, and delegates here; a
+    compiled execution plan (:mod:`repro.api.plan`) keeps the
+    :class:`_Encoded` arrays from its trace and re-enters here on every
+    ``run()``, skipping the per-call Python encoding walk.  ``backend``
+    accepts ``"auto"`` and resolves through the substrate with the
+    numpy-preferring policy (the numpy event loop is the reference
+    implementation; jax runs on explicit request).
+    """
+    if on_deadlock not in ("mask", "raise"):
+        raise ValueError(f"unknown on_deadlock mode {on_deadlock!r}")
+    resolved = backend_mod.resolve(backend, enc.kind.shape[0],
+                                   prefer="numpy")
+    placement = tuple(placement)
+    if resolved == "numpy":
         return _run_numpy(enc, arch, specs, placement, t_max, on_deadlock)
-    if backend == "jax":
-        if not HAVE_JAX:
-            raise RuntimeError("backend='jax' requested but jax is not "
-                               "importable")
-        return _run_jax(enc, arch, specs, placement, t_max, on_deadlock)
-    raise ValueError(f"unknown backend {backend!r}")
+    return _run_jax(enc, arch, specs, placement, t_max, on_deadlock)
 
 
 # --------------------------------------------------------------------------
@@ -464,50 +499,37 @@ def _records_from_arrays(enc: _Encoded, start_arr: np.ndarray,
     return records
 
 
-def _run_jax(enc: _Encoded, arch: str, specs, placement, t_max: float,
-             on_deadlock: str = "mask") -> BatchRunResult:
+def _build_jax_runner(B: int, R: int, L: int, K: int, D: int):
+    """One jitted desync event loop for one ``(B, R, L, K, D)`` shape
+    bucket.
+
+    Every array the loop consumes — programs, placement, and the
+    per-kernel ``(f, b_s)`` vectors — is an *argument* of the jitted
+    runner, not a closure capture, so the substrate can cache the
+    compiled executable process-wide: repeated straggler ensembles,
+    pod-plan searches on one topology, and plans re-run with swapped
+    kernel specs all reuse one compilation.
+    """
     import jax
     import jax.numpy as jnp
     from jax import lax
 
-    B, R, L = enc.kind.shape
-    K = max(len(enc.kernels), 1)
-    f_vec, bs_vec = _arch_vectors(enc.kernels, specs, arch)
-    if not len(f_vec):
-        f_vec = np.zeros(1)
-        bs_vec = np.zeros(1)
-    dom_of_rank = _domain_order(placement)
-    D = int(dom_of_rank.max()) + 1 if R else 1
-    # Each retiring step retires >= 1 item per active scenario (and pure
-    # allreduce-resolution steps retire a full wavefront), so R*L bounds
-    # the loop up to EPS-sized stutter steps near large clock values
-    # (ulp(t) > EPS); the 2x margin absorbs those, and exhausting the
-    # budget anyway is reported as an error below, never as silently
-    # truncated records.
-    max_steps = 2 * R * L + 16
+    from .sharing import _solve_single_jax
 
-    with jax.experimental.enable_x64():
-        kind = jnp.asarray(enc.kind, jnp.int32)
-        qty = jnp.asarray(enc.qty, jnp.float64)
-        kern = jnp.asarray(enc.kern, jnp.int32)
-        plen = jnp.asarray(enc.plen, jnp.int32)
-        dom = jnp.asarray(dom_of_rank, jnp.int32)
-        f_k = jnp.asarray(f_vec, jnp.float64)
-        bs_k = jnp.asarray(bs_vec, jnp.float64)
+    def take(arr, pcs):
+        return jnp.take_along_axis(
+            arr, jnp.minimum(pcs, L - 1)[..., None], axis=2)[..., 0]
 
-        def take(arr, pcs):
-            return jnp.take_along_axis(
-                arr, jnp.minimum(pcs, L - 1)[..., None], axis=2)[..., 0]
+    # Every (scenario, domain) pair is one Eq. 4–5 instance over the K
+    # kernels; reuse the sharing module's single-scenario jax solver
+    # (the same code path solve_batch vmaps) so the two engines cannot
+    # drift.  n_max = R is the static recursion bound: iterations past
+    # a row's n_tot are masked no-ops, as in _solve_arrays_np.
+    solver = jax.vmap(
+        lambda n_, f_, bs_: _solve_single_jax(
+            n_, f_, bs_, 0.5, R, mode="recursion"))
 
-        # Every (scenario, domain) pair is one Eq. 4–5 instance over the K
-        # kernels; reuse the sharing module's single-scenario jax solver
-        # (the same code path solve_batch vmaps) so the two engines cannot
-        # drift.  n_max = R is the static recursion bound: iterations past
-        # a row's n_tot are masked no-ops, as in _solve_arrays_np.
-        from .sharing import _solve_single_jax
-        solver = jax.vmap(
-            lambda n_, f_, bs_: _solve_single_jax(
-                n_, f_, bs_, 0.5, R, mode="recursion"))
+    def runner(kind, qty, kern, plen, dom, f_k, bs_k, t_max, max_steps):
 
         def rates_of(working, kern_c):
             """Per-rank progress rates from one batched Eq. 4–5 solve over
@@ -628,11 +650,65 @@ def _run_jax(enc: _Encoded, arch: str, specs, placement, t_max: float,
             jnp.int64(0),
             jnp.zeros(B, bool),                                  # deadlock
         )
-        runner = jax.jit(
-            lambda s: lax.while_loop(cond, step, s))
-        out = runner(state)
-        (t, pc, _, _, _, _, _, start_a, end_a, steps, dead) = \
+        t, pc, _, _, _, _, _, start_a, end_a, steps, dead = \
+            lax.while_loop(cond, step, state)
+        return t, pc, start_a, end_a, steps, dead
+
+    return jax.jit(runner)
+
+
+def _run_jax(enc: _Encoded, arch: str, specs, placement, t_max: float,
+             on_deadlock: str = "mask") -> BatchRunResult:
+    import jax
+    import jax.numpy as jnp
+
+    B, R, L = enc.kind.shape
+    K = max(len(enc.kernels), 1)
+    f_vec, bs_vec = _arch_vectors(enc.kernels, specs, arch)
+    if not len(f_vec):
+        f_vec = np.zeros(1)
+        bs_vec = np.zeros(1)
+    dom_of_rank = _domain_order(placement)
+    D = int(dom_of_rank.max()) + 1 if R else 1
+    # Each retiring step retires >= 1 item per active scenario (and pure
+    # allreduce-resolution steps retire a full wavefront), so R*L bounds
+    # the loop up to EPS-sized stutter steps near large clock values
+    # (ulp(t) > EPS); the 2x margin absorbs those, and exhausting the
+    # budget anyway is reported as an error below, never as silently
+    # truncated records.
+    max_steps = 2 * R * L + 16
+
+    # Shape-bucket the batch and program axes so nearby ensemble / plan
+    # sizes reuse one compiled executable: padded scenarios have empty
+    # programs (plen 0, immediately done) and padded program slots are
+    # _PAD items past every plen — both exactly neutral to the loop.
+    Bb = backend_mod.bucket(B)
+    Lb = backend_mod.bucket(L)
+    kind_p = np.full((Bb, R, Lb), _PAD, dtype=enc.kind.dtype)
+    kind_p[:B, :, :L] = enc.kind
+    qty_p = np.zeros((Bb, R, Lb))
+    qty_p[:B, :, :L] = enc.qty
+    kern_p = np.full((Bb, R, Lb), -1, dtype=enc.kern.dtype)
+    kern_p[:B, :, :L] = enc.kern
+    plen_p = np.zeros((Bb, R), dtype=enc.plen.dtype)
+    plen_p[:B] = enc.plen
+
+    runner = backend_mod.jitted(
+        ("desync.run_batch", Bb, R, Lb, K, D),
+        lambda: _build_jax_runner(Bb, R, Lb, K, D))
+    with jax.experimental.enable_x64():
+        out = runner(jnp.asarray(kind_p, jnp.int32),
+                     jnp.asarray(qty_p, jnp.float64),
+                     jnp.asarray(kern_p, jnp.int32),
+                     jnp.asarray(plen_p, jnp.int32),
+                     jnp.asarray(dom_of_rank, jnp.int32),
+                     jnp.asarray(f_vec, jnp.float64),
+                     jnp.asarray(bs_vec, jnp.float64),
+                     jnp.float64(t_max), jnp.int64(max_steps))
+        t, pc, start_a, end_a, steps, dead = \
             tuple(np.asarray(x) for x in out)
+    t, pc, dead = t[:B], pc[:B], dead[:B]
+    start_a, end_a = start_a[:B, :, :L], end_a[:B, :, :L]
 
     if dead.any() and on_deadlock == "raise":
         b = int(np.nonzero(dead)[0][0])

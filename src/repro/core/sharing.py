@@ -35,16 +35,14 @@ from typing import Sequence
 
 import numpy as np
 
+from . import backend as backend_mod
+from .backend import HAVE_JAX  # re-export: the probe lives on the substrate
 from .table2 import KernelSpec
 
-try:  # The batched JAX path is optional: numpy covers hermetic containers.
+if HAVE_JAX:  # pragma: no branch - capability guard, not dispatch
     import jax
     import jax.numpy as jnp
     from jax import lax
-
-    HAVE_JAX = True
-except ModuleNotFoundError:  # pragma: no cover - exercised only without jax
-    HAVE_JAX = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -306,16 +304,24 @@ if HAVE_JAX:
         bw = alphas * util * b
         return b, alphas, util, bw
 
-    @functools.lru_cache(maxsize=None)
-    def _jax_batch_solver(mode: str):
-        """Jitted vmap of the single-scenario solver, cached per mode."""
+    def _build_jax_solver(mode: str, n_max: int):
+        """Jitted vmap of the single-scenario solver for one shape
+        bucket; registered in the substrate's process-wide cache."""
         vmapped = jax.vmap(
-            functools.partial(_solve_single_jax, mode=mode),
-            in_axes=(0, 0, 0, None, None))
-        return jax.jit(vmapped, static_argnums=(4,))
+            functools.partial(_solve_single_jax, mode=mode, n_max=n_max),
+            in_axes=(0, 0, 0, None))
+        return jax.jit(vmapped)
 
     def _solve_arrays_jax(n, f, bs, *, utilization, p0_factor, saturated):
-        """JAX twin of :func:`_solve_arrays_np` (float64 via local x64)."""
+        """JAX twin of :func:`_solve_arrays_np` (float64 via local x64).
+
+        The jitted solver is fetched from the substrate's cache keyed by
+        the padded ``(B, G)`` bucket (plus the static recursion bound),
+        so nearby batch sizes share one XLA executable: inputs are
+        padded with neutral ``n = 0`` rows up to the bucket and the
+        outputs sliced back — exactly neutral in Eqs. 4–5, so the real
+        rows are bit-for-bit the unpadded solve.
+        """
         if saturated is True:
             mode, aux = "saturated", 0.0
         elif isinstance(utilization, (int, float)):
@@ -325,14 +331,25 @@ if HAVE_JAX:
         else:
             raise ValueError(f"unknown utilization mode {utilization!r}")
         n = np.asarray(n, dtype=np.float64)
-        n_max = int(n.sum(axis=-1).max()) if n.size else 0
-        solver = _jax_batch_solver(mode)
+        B, G = n.shape
+        # Only the recursion mode compiles an n-dependent loop; the
+        # other modes share one executable per (B, G) bucket.
+        n_max = int(n.sum(axis=-1).max()) if (n.size and mode == "recursion") \
+            else 0
+        n_max_b = backend_mod.bucket(n_max) if n_max else 0
+        Bb = backend_mod.bucket(B)
+        solver = backend_mod.jitted(
+            ("sharing.solve_batch", mode, Bb, G, n_max_b),
+            lambda: _build_jax_solver(mode, n_max_b))
         with jax.experimental.enable_x64():
-            out = solver(jnp.asarray(n, jnp.float64),
-                         jnp.asarray(f, jnp.float64),
-                         jnp.asarray(bs, jnp.float64),
-                         jnp.float64(aux), n_max)
-        return tuple(np.asarray(x) for x in out)
+            out = solver(
+                jnp.asarray(backend_mod.pad_rows(n, Bb), jnp.float64),
+                jnp.asarray(backend_mod.pad_rows(
+                    np.asarray(f, dtype=np.float64), Bb), jnp.float64),
+                jnp.asarray(backend_mod.pad_rows(
+                    np.asarray(bs, dtype=np.float64), Bb), jnp.float64),
+                jnp.float64(aux))
+        return tuple(np.asarray(x)[:B] for x in out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -377,10 +394,52 @@ class BatchSharePrediction:
             bw_group=tuple(float(self.bw_group[i, j]) for j in keep))
 
 
+def solve_arrays(n: np.ndarray, f: np.ndarray, bs: np.ndarray, *,
+                 backend: str = "auto",
+                 utilization: str | float = "recursion",
+                 p0_factor: float = 0.5, saturated: bool | None = None,
+                 jax_cutoff: int | None = None,
+                 chunk: int | None = None
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """The validated array core behind :func:`solve_batch`.
+
+    ``n``, ``f``, ``bs`` must already be float64 arrays of shape
+    ``(B, G)`` — compiled execution plans (:mod:`repro.api.plan`) call
+    this directly to skip re-validation on every run.  Returns
+    ``(b_overlap (B,), alphas (B,G), util (B,), bw_group (B,G))``.
+
+    ``backend`` resolves through the substrate
+    (:func:`repro.core.backend.resolve`): ``"auto"`` picks jax when
+    importable and ``B >= jax_cutoff`` (default
+    ``REPRO_JAX_CUTOFF`` / 64).  ``chunk`` streams the batch axis in
+    slabs of that many scenarios (default ``REPRO_CHUNK_B``; unset =
+    whole batch at once) — row-independent math, so chunking is
+    bit-for-bit the unchunked solve.
+    """
+    backend = backend_mod.resolve(backend, n.shape[0],
+                                  jax_cutoff=jax_cutoff)
+    solve = _solve_arrays_jax if backend == "jax" else _solve_arrays_np
+    kwargs = dict(utilization=utilization, p0_factor=p0_factor,
+                  saturated=saturated)
+    eff_chunk = backend_mod.default_chunk(chunk)
+    if eff_chunk is not None and n.shape[0] > eff_chunk:
+        return backend_mod.run_chunked(
+            lambda *arrs: solve(*arrs, **kwargs), (n, f, bs), eff_chunk)
+    return solve(n, f, bs, **kwargs)
+
+
+def resolve_backend(backend: str, batch_size: int | None = None, *,
+                    jax_cutoff: int | None = None) -> str:
+    """The backend a ``solve_batch``-family call with these parameters
+    will run on (compiled plans record this at trace time)."""
+    return backend_mod.resolve(backend, batch_size, jax_cutoff=jax_cutoff)
+
+
 def solve_batch(n, f, bs, names=None, *,
                 utilization: str | float = "recursion",
                 p0_factor: float = 0.5, saturated: bool | None = None,
-                backend: str = "auto") -> BatchSharePrediction:
+                backend: str = "auto", jax_cutoff: int | None = None,
+                chunk: int | None = None) -> BatchSharePrediction:
     """Solve Eqs. 4–5 for a batch of scenarios.
 
     ``n``, ``f``, ``bs``: array-likes of shape ``(B, G)`` (a single ``(G,)``
@@ -388,8 +447,11 @@ def solve_batch(n, f, bs, names=None, *,
     ``names``: optional ``(B, G)`` nested sequence of group labels, carried
     through to :meth:`BatchSharePrediction.scenario` (padding entries "").
     ``backend``: ``"jax"`` (vmapped + jitted), ``"numpy"``, or ``"auto"``
-    (jax when importable, else numpy).  Both backends compute in float64
-    and agree with the scalar :func:`predict` to ~1e-12 relative.
+    (resolved by the substrate: jax when importable and ``B >=
+    jax_cutoff``, see :func:`repro.core.backend.resolve`).  Both backends
+    compute in float64 and agree with the scalar :func:`predict` to
+    ~1e-12 relative.  ``chunk`` streams huge batches in slabs (see
+    :func:`solve_arrays`).
     """
     n = np.atleast_2d(np.asarray(n, dtype=np.float64))
     f = np.atleast_2d(np.asarray(f, dtype=np.float64))
@@ -404,21 +466,10 @@ def solve_batch(n, f, bs, names=None, *,
             raise ValueError(
                 f"names rows {[len(r) for r in names]} do not match "
                 f"n{n.shape}")
-    if backend == "auto":
-        backend = "jax" if HAVE_JAX else "numpy"
-    if backend == "jax":
-        if not HAVE_JAX:
-            raise RuntimeError("backend='jax' requested but jax is not "
-                               "importable")
-        b, alphas, util, bw = _solve_arrays_jax(
-            n, f, bs, utilization=utilization, p0_factor=p0_factor,
-            saturated=saturated)
-    elif backend == "numpy":
-        b, alphas, util, bw = _solve_arrays_np(
-            n, f, bs, utilization=utilization, p0_factor=p0_factor,
-            saturated=saturated)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
+    b, alphas, util, bw = solve_arrays(
+        n, f, bs, backend=backend, utilization=utilization,
+        p0_factor=p0_factor, saturated=saturated, jax_cutoff=jax_cutoff,
+        chunk=chunk)
     return BatchSharePrediction(n=n, f=f, bs=bs, b_overlap=b, alphas=alphas,
                                 util=util, bw_group=bw, names=names)
 

@@ -17,7 +17,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Sequence
 
-from ..api import Scenario, ScenarioBatch, simulate
+from ..api import Scenario, ScenarioBatch
+from ..api import compile as compile_plan
 from ..configs.base import ModelConfig
 from ..core.hlo import RooflineTerms
 from ..core.machine import TPU_V5E, TpuModel
@@ -186,10 +187,14 @@ def evaluate_pod_plans(terms: RooflineTerms,
             sc = sc.step(fbs["grad_drain"], drain.hbm_bytes,
                          name="grad_drain", tag="grad_drain")
         scens.append(sc)
-    # Plans are compared on t_step; a masked deadlocked candidate would
-    # win with a bogus short step, so abort loudly instead.
-    res = simulate(ScenarioBatch.of(scens), t_max=1e6, backend=backend,
-                   on_deadlock="raise")
+    # Compile the candidate batch once (program encoding, placement
+    # validation, backend selection), then run; the jitted engine for
+    # this topology's shape bucket is cached process-wide, so repeated
+    # searches on one pod compile once.  Plans are compared on t_step;
+    # a masked deadlocked candidate would win with a bogus short step,
+    # so abort loudly instead.
+    plan = compile_plan(ScenarioBatch.of(scens), verb="simulate")
+    res = plan.run(t_max=1e6, backend=backend, on_deadlock="raise")
     return [PodPlanEvaluation(
         chip_load=load,
         t_step=res.makespan(b),

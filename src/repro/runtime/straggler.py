@@ -17,7 +17,8 @@ import dataclasses
 from collections import deque
 from typing import Sequence
 
-from ..api import Scenario, simulate
+from ..api import Scenario
+from ..api import compile as compile_plan
 from ..core.desync import skewness
 from ..core.topology import Topology
 
@@ -67,11 +68,12 @@ class StragglerMonitor:
         configuration amplifies desync and needs periodic barriers.
 
         The skew is estimated over an ``ensemble`` of independent noise
-        draws (seeds ``seed .. seed + ensemble - 1``), all advanced in one
+        draws (member streams split deterministically from ``seed`` via
+        :func:`repro.api.plan.derive_member_seed`), all advanced in one
         batched :meth:`repro.core.desync.DesyncSimulator.run_batch` call,
         so the estimate does not hinge on a single lucky draw and costs
         one run instead of ``ensemble``.  ``ensemble=1`` equals a scalar
-        ``DesyncSimulator`` run of the same seed-0 program (the batched
+        ``DesyncSimulator`` run of the member-0 program (the batched
         engine with B = 1 matches the scalar engine record for record);
         note the scalar engine's own clock-advance and rank-truncation
         fixes shifted absolute skew values relative to earlier releases.
@@ -94,8 +96,10 @@ class StragglerMonitor:
         sc = sc.with_noise(5e-5, seed=seed, ensemble=ensemble)
         if topology is not None:
             sc = sc.using(topology).on_domains(placement)
-        # A masked-out deadlocked draw would silently skew the ensemble
-        # skew statistic, so abort loudly instead.
-        res = simulate(sc, t_max=120.0, backend=backend,
-                       on_deadlock="raise")
+        # One compile per ensemble (noise draws and program encoding
+        # traced once; same-shaped ensembles share the jitted engine
+        # process-wide); a masked-out deadlocked draw would silently
+        # skew the ensemble skew statistic, so abort loudly instead.
+        plan = compile_plan(sc, verb="simulate")
+        res = plan.run(t_max=120.0, backend=backend, on_deadlock="raise")
         return res.mean_skew(phases[probe].name)

@@ -152,10 +152,12 @@ def test_placed_predict_respects_strict_capacity():
 
 
 def _native_programs(arch, n_ranks, steps, noise, seeds):
-    """Build run_batch's native inputs the way the facade promises to."""
+    """Build run_batch's native inputs the way the facade promises to:
+    ensemble member m of base seed 0 draws from an independent stream
+    seeded by ``derive_member_seed(0, m)`` (the splittable counter)."""
     batch = []
     for s in seeds:
-        rng = random.Random(s)
+        rng = random.Random(api.derive_member_seed(0, s))
         progs = []
         draws = [rng.expovariate(1 / noise) for _ in range(n_ranks)]
         for r in range(n_ranks):

@@ -292,14 +292,18 @@ def test_seed_ensemble_sign_agreement():
 
 def test_single_draw_matches_scalar_engine():
     """ensemble=1 goes through the batch engine but must equal a scalar
-    simulation of the same program (B=1 exactness, end to end)."""
+    simulation of the same program (B=1 exactness, end to end).  Member
+    0 of base seed 0 draws from the facade's splittable seed stream
+    (api.derive_member_seed), so the scalar reference seeds the same
+    way."""
+    from repro.api import derive_member_seed
     from repro.core.table2 import KernelSpec
     mon = StragglerMonitor(n_workers=12)
     got = mon.predict_amplification(_phases(0.9), probe=1, ensemble=1)
     phases = _phases(0.9)
     specs = {ph.name: KernelSpec.synthetic(ph.name, ph.f, ph.bs)
              for ph in phases}
-    rng = random.Random(0)
+    rng = random.Random(derive_member_seed(0, 0))
     progs = []
     for _ in range(12):
         prog = [Idle(rng.expovariate(1 / 5e-5), tag="noise")]
