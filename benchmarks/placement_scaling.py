@@ -1,0 +1,201 @@
+"""Placement-batched solve payoff: one PlacedBatchPlan.run() vs the
+per-candidate predict loop.
+
+Before this subsystem existed, sweeping B placement candidates on one
+topology meant B separate ``api.predict(scenario)`` calls — B spec
+resolutions, B ragged packings, B solver dispatches.  A placed
+``ScenarioBatch`` now packs the whole sweep into one (B, D, K) grid and
+solves it in a single flattened call.  This benchmark records:
+
+* ``percall``  — the headline: one ``plan.run()`` against B separate
+  placed ``api.predict`` calls (acceptance: >= 10x at B = 256);
+* ``swap``     — ``plan.run(placement=...)``, re-solving the compiled
+  sweep under a fresh candidate grid (the search inner loop);
+* ``swap_f``   — ``plan.run(f=...)``, calibration numbers swapped into
+  the placed grid with no re-trace;
+* ``jit_cache`` — substrate cache hit rate when the identical sweep is
+  compiled and run again (jax only; acceptance: 1.0 — a repeat sweep
+  must never recompile).
+
+``python benchmarks/placement_scaling.py --out BENCH_placement.json``
+writes the committed artifact and exits nonzero if a bound is broken.
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import sys
+import time
+
+from repro import api
+from repro.core import backend as backend_mod
+
+B_SWEEP = 256
+SPEEDUP_BOUND = 10.0   # plan.run() vs per-candidate predict loop
+REPS = 30
+SAMPLES = 7
+
+KERNELS = ("DCOPY", "DDOT2", "DAXPY", "Schoenauer")
+DOMAINS = ("CLX/s0/d0", "CLX/s1/d0")
+
+
+def _time_pair_us(fn_a, fn_b, reps: int = REPS,
+                  samples: int = SAMPLES) -> tuple[float, float]:
+    """Best-of-``samples`` mean over ``reps`` calls for two functions,
+    in µs; sample blocks alternate so drift hits both sides alike and
+    GC is paused (same protocol as benchmarks/plan_overhead.py)."""
+    best_a = best_b = float("inf")
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        for _ in range(samples):
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn_a()
+            best_a = min(best_a, (time.perf_counter() - t0) / reps)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                fn_b()
+            best_b = min(best_b, (time.perf_counter() - t0) / reps)
+            gc.collect()
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    return best_a * 1e6, best_b * 1e6
+
+
+def _time_us(fn, reps: int = REPS, samples: int = SAMPLES) -> float:
+    return _time_pair_us(fn, fn, reps=reps, samples=samples)[0]
+
+
+def _placed_scenarios(b: int, shift: int = 0) -> list:
+    """B placement candidates for a two-kernel co-run on CLX-2S: sweep
+    thread splits and socket assignments (the Sec. 5 search pattern)."""
+    base = api.Scenario.on("CLX").using("CLX-2S")
+    out = []
+    for i in range(b):
+        j = i + shift
+        sc = (base
+              .placed(KERNELS[j % 3], 1 + j % 8, DOMAINS[j % 2])
+              .placed(KERNELS[(j + 1) % 4], 1 + (j * 3) % 8,
+                      DOMAINS[(j + 1) % 2]))
+        if j % 2:
+            sc = sc.placed("DAXPY", 1 + j % 4, DOMAINS[0])
+        out.append(sc)
+    return out
+
+
+def measure() -> dict:
+    scens = _placed_scenarios(B_SWEEP)
+    batch = api.ScenarioBatch.of(scens)
+    plan = api.compile(batch)
+    plan.run()                      # warm caches + jit before timing
+
+    t_percall = _time_us(lambda: [api.predict(sc) for sc in scens],
+                         reps=3, samples=5)
+    t_run = _time_us(plan.run)
+    alt = api.ScenarioBatch.of(_placed_scenarios(B_SWEEP, shift=1))
+    placement2 = alt.placements
+    t_swap = _time_us(lambda: plan.run(placement=placement2))
+    f2 = plan.grid.f * 1.01
+    t_swap_f = _time_us(lambda: plan.run(f=f2))
+
+    # Repeat-sweep cache behaviour: compiling the same sweep again must
+    # reuse every jitted solver — zero recompiles, hit rate 1.0.
+    cache = None
+    if backend_mod.HAVE_JAX:
+        for b in (200, B_SWEEP):    # populate the 256-row bucket
+            api.compile(api.ScenarioBatch.of(
+                _placed_scenarios(b))).run(backend="jax")
+        before = backend_mod.cache_stats()
+        for b in (200, B_SWEEP):    # the repeat sweep, compiled afresh
+            api.compile(api.ScenarioBatch.of(
+                _placed_scenarios(b))).run(backend="jax")
+        after = backend_mod.cache_stats()
+        hits = after["hits"] - before["hits"]
+        misses = after["misses"] - before["misses"]
+        cache = {
+            "lookups": hits + misses,
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": round(hits / (hits + misses), 3)
+            if hits + misses else 0.0,
+            "process_entries": after["entries"],
+        }
+
+    return {
+        "B": B_SWEEP,
+        "backend": plan.engine,
+        "bucket": list(plan.bucket),
+        "percall_us": round(t_percall, 1),
+        "plan_run_us": round(t_run, 3),
+        "swap_placement_us": round(t_swap, 3),
+        "swap_f_us": round(t_swap_f, 3),
+        "speedup_vs_percall": round(t_percall / t_run, 1),
+        "jit_cache": cache,
+    }
+
+
+def check(r: dict) -> bool:
+    ok = r["speedup_vs_percall"] >= SPEEDUP_BOUND
+    if r["jit_cache"] is not None:
+        # A repeated sweep must be compile-free.
+        ok &= r["jit_cache"]["hit_rate"] == 1.0
+    return ok
+
+
+def rows():
+    r = measure()
+    out = [
+        (f"placement/B={r['B']}/percall_predict", r["percall_us"],
+         f"plan_run={r['plan_run_us']:.1f}us;"
+         f"speedup={r['speedup_vs_percall']:.1f}x"),
+        (f"placement/B={r['B']}/plan_run", r["plan_run_us"],
+         f"bucket={tuple(r['bucket'])}"),
+        (f"placement/B={r['B']}/swap_placement", r["swap_placement_us"],
+         "no-retrace"),
+        (f"placement/B={r['B']}/swap_f", r["swap_f_us"], "no-retrace"),
+    ]
+    if r["jit_cache"] is not None:
+        c = r["jit_cache"]
+        out.append(("placement/jit_cache/repeat_sweep", 0.0,
+                    f"hit_rate={c['hit_rate']};hits={c['hits']};"
+                    f"misses={c['misses']}"))
+    out.append(("placement/check/bounds", 0.0,
+                f"ok={check(r)};speedup>={SPEEDUP_BOUND:.0f}x"))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="JSON artifact path")
+    args = ap.parse_args(argv)
+    r = measure()
+    ok = check(r)
+    report = {
+        "benchmark": "placement_scaling",
+        "jax": backend_mod.HAVE_JAX,
+        "bound_speedup_vs_percall": SPEEDUP_BOUND,
+        "bound_repeat_hit_rate": 1.0,
+        "ok": ok,
+        "results": r,
+    }
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.out}  (ok={ok})")
+    print(f"B={r['B']}: per-candidate {r['percall_us']:.0f}us  "
+          f"plan.run {r['plan_run_us']:.0f}us  "
+          f"({r['speedup_vs_percall']:.1f}x)  "
+          f"placement-swap {r['swap_placement_us']:.0f}us  "
+          f"f-swap {r['swap_f_us']:.0f}us")
+    if r["jit_cache"] is not None:
+        print(f"jit cache (repeat sweep): {r['jit_cache']}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

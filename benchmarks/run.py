@@ -26,7 +26,8 @@ from repro.api import dump_dicts
 
 from . import (api_overhead, calibrate_roundtrip, desync_scaling,
                fig6_full_domain, fig7_symmetric, fig8_error, fig9_pairings,
-               hpcg_desync, plan_overhead, table2_kernels, tpu_overlap)
+               hpcg_desync, placement_scaling, plan_overhead, table2_kernels,
+               tpu_overlap)
 
 MODULES = {
     "table2": table2_kernels,
@@ -40,6 +41,7 @@ MODULES = {
     "calibrate": calibrate_roundtrip,
     "api_overhead": api_overhead,
     "plan_overhead": plan_overhead,
+    "placement_scaling": placement_scaling,
 }
 
 

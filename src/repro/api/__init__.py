@@ -38,26 +38,26 @@ facade dispatches to, and facade results are bit-for-bit theirs.
 """
 
 from .engine import JAX_BATCH_CUTOFF, predict, simulate
-from .plan import (BatchPlan, PlacedPlan, Plan, ScalarPlan, SimulatePlan,
-                   compile, derive_member_seed)
+from .plan import (BatchPlan, PlacedBatchPlan, PlacedPlan, Plan,
+                   ScalarPlan, SimulatePlan, compile, derive_member_seed)
 from .registry import (ResolvedSpec, from_loop_features, known_archs,
                        known_kernels, resolve, suggest,
                        unknown_key_error, unknown_key_message)
-from .results import (BatchPrediction, DomainShare, GroupShare, Prediction,
-                      SimulationResult, dump_dicts, dump_ndjson,
-                      iter_ndjson, load_ndjson)
+from .results import (BatchPrediction, DomainShare, GroupShare,
+                      PlacedBatchPrediction, Prediction, SimulationResult,
+                      dump_dicts, dump_ndjson, iter_ndjson, load_ndjson)
 from .scenario import (DEFAULT_WORK_BYTES, Noise, RunSpec, Scenario,
                        ScenarioBatch, StepSpec)
 
 __all__ = [
     "predict", "simulate", "JAX_BATCH_CUTOFF",
     "compile", "Plan", "ScalarPlan", "PlacedPlan", "BatchPlan",
-    "SimulatePlan", "derive_member_seed",
+    "PlacedBatchPlan", "SimulatePlan", "derive_member_seed",
     "Scenario", "ScenarioBatch", "RunSpec", "StepSpec", "Noise",
     "DEFAULT_WORK_BYTES",
     "resolve", "ResolvedSpec", "from_loop_features", "known_kernels",
     "known_archs", "suggest", "unknown_key_error", "unknown_key_message",
-    "Prediction", "BatchPrediction", "SimulationResult", "GroupShare",
-    "DomainShare", "dump_ndjson", "iter_ndjson", "dump_dicts",
-    "load_ndjson",
+    "Prediction", "BatchPrediction", "PlacedBatchPrediction",
+    "SimulationResult", "GroupShare", "DomainShare", "dump_ndjson",
+    "iter_ndjson", "dump_dicts", "load_ndjson",
 ]

@@ -17,13 +17,18 @@ scenario shape          engine
 =====================  =====================================================
 single, unplaced        scalar reference path (``sharing.predict``)
 single, placed          topology solver (``topology.predict_placed``)
-batch                   batched array solver (``sharing.solve_arrays``) —
+batch, unplaced         batched array solver (``sharing.solve_arrays``) —
                         numpy, or the substrate's cached jitted jax solver
                         when importable and B is at least the configured
                         cutoff (``REPRO_JAX_CUTOFF`` / ``jax_cutoff=``)
+batch, placed on one    placed-grid solver
+topology                (``sharing.solve_placed_batch`` over the packed
+                        ``(B, D, K)`` occupancy grid; dispatch sees the
+                        flattened ``B·D`` row count)
 any, ``simulate``       batched desync event engine
                         (``desync_batch.run_encoded``; numpy reference or
-                        the cached jitted ``lax.while_loop`` on request)
+                        the cached jitted ``lax.while_loop`` on request;
+                        batch × noise-ensemble grids fuse into one run)
 =====================  =====================================================
 
 The old module-level entry points stay exactly as they are — they *are*
@@ -37,7 +42,8 @@ from __future__ import annotations
 
 from ..core import backend as backend_mod
 from .plan import compile as compile_plan
-from .results import BatchPrediction, Prediction, SimulationResult
+from .results import (BatchPrediction, PlacedBatchPrediction, Prediction,
+                      SimulationResult)
 from .scenario import Scenario, ScenarioBatch
 
 #: Default ``backend="auto"`` jax cutoff (see
@@ -51,7 +57,7 @@ JAX_BATCH_CUTOFF = backend_mod.DEFAULT_JAX_CUTOFF
 def predict(scenario: Scenario | ScenarioBatch, *,
             backend: str | None = None,
             jax_cutoff: int | None = None
-            ) -> Prediction | BatchPrediction:
+            ) -> Prediction | BatchPrediction | PlacedBatchPrediction:
     """Solve the sharing model (Eqs. 4–5) for a scenario or batch.
 
     One-shot sugar for ``compile(scenario, verb="predict").run(...)``.
@@ -59,7 +65,8 @@ def predict(scenario: Scenario | ScenarioBatch, *,
     (``"numpy"`` / ``"jax"`` / ``"auto"``); ``jax_cutoff`` overrides
     the ``auto`` threshold for this call.  Returns a
     :class:`Prediction` for a single scenario, a
-    :class:`BatchPrediction` for a batch.
+    :class:`BatchPrediction` for an unplaced batch, a
+    :class:`PlacedBatchPrediction` for a batch placed on one topology.
     """
     return compile_plan(scenario, verb="predict").run(
         backend=backend, jax_cutoff=jax_cutoff)
@@ -67,19 +74,24 @@ def predict(scenario: Scenario | ScenarioBatch, *,
 
 def simulate(scenario: Scenario | ScenarioBatch, *,
              backend: str | None = None, t_max: float | None = None,
-             on_deadlock: str = "mask") -> SimulationResult:
+             on_deadlock: str = "mask",
+             fuse_ensembles: bool = True) -> SimulationResult:
     """Run a scenario (or batch) through the desync event engine.
 
     One-shot sugar for ``compile(scenario, verb="simulate").run(...)``.
     A single scenario with ``.with_noise(..., ensemble=B)`` expands to B
     independent noise draws (member seeds derived deterministically from
     the scenario's seed via :func:`repro.api.plan.derive_member_seed`);
-    a :class:`ScenarioBatch` simulates its B scenarios.  All members
-    advance in **one** batched engine call.
+    a :class:`ScenarioBatch` simulates its B scenarios, each scenario's
+    own ensemble fused in as adjacent rows (``result.members`` maps rows
+    back to ``(scenario, member)``).  All members advance in **one**
+    batched engine call.  ``fuse_ensembles=False`` forces the legacy
+    one-row-per-scenario contract, which rejects inner ensembles.
 
     ``backend`` (``"numpy"`` default / ``"jax"``) and ``t_max`` override
     the scenarios' options; ``on_deadlock`` is the batched engine's
     masking contract (``"mask"`` or ``"raise"``).
     """
-    return compile_plan(scenario, verb="simulate").run(
+    return compile_plan(scenario, verb="simulate",
+                        fuse_ensembles=fuse_ensembles).run(
         backend=backend, t_max=t_max, on_deadlock=on_deadlock)

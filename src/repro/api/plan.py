@@ -18,18 +18,23 @@ encoding walk.  A *plan* pays it once::
 ``plan.run(f=..., b_s=..., cores=...)`` equals a fresh compile of the
 modified scenarios, without re-tracing.
 
-Four plan shapes mirror the engine dispatch table:
+Five plan shapes mirror the engine dispatch table:
 
-=============  ========================  ================================
-plan kind      compiled from             runs on
-=============  ========================  ================================
-``scalar``     single unplaced scenario  ``sharing.predict`` (reference)
-``placed``     single placed scenario    ``topology.predict_placed``
-``batch``      :class:`ScenarioBatch`    ``sharing.solve_arrays`` —
-                                         numpy or the substrate's cached
-                                         jitted solver
-``simulate``   any (programs encoded)    ``desync_batch.run_encoded``
-=============  ========================  ================================
+================  ========================  ============================
+plan kind         compiled from             runs on
+================  ========================  ============================
+``scalar``        single unplaced scenario  ``sharing.predict``
+                                            (reference)
+``placed``        single placed scenario    ``topology.predict_placed``
+``batch``         :class:`ScenarioBatch`    ``sharing.solve_arrays`` —
+                                            numpy or the substrate's
+                                            cached jitted solver
+``placed-batch``  placed ScenarioBatch      ``sharing.
+                  (one shared topology)     solve_placed_batch`` over
+                                            the packed (B, D, K) grid
+``simulate``      any (programs encoded;    ``desync_batch.run_encoded``
+                  batch × ensemble fused)
+================  ========================  ============================
 
 Backend + jit selection happens at compile time through
 :func:`repro.core.backend.resolve` (the tree's only backend policy);
@@ -53,8 +58,9 @@ from ..core import topology as topology_mod
 from ..core.desync import Allreduce, Idle, Item, WaitNeighbors, Work
 from ..core.sharing import Group
 from ..core.table2 import KernelSpec
-from .results import (BatchPrediction, Prediction, SimulationResult,
-                      from_share_prediction, from_topology_prediction)
+from .results import (BatchPrediction, PlacedBatchPrediction, Prediction,
+                      SimulationResult, from_share_prediction,
+                      from_topology_prediction)
 from .scenario import Scenario, ScenarioBatch
 
 # ---------------------------------------------------------------------------
@@ -353,6 +359,101 @@ class BatchPlan(Plan):
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
+class PlacedBatchPlan(Plan):
+    """B placements on one topology packed once → the grid solver.
+
+    The trace paid placement validation and the ``(B, D, K)`` grid
+    packing (:func:`repro.core.topology.pack_placed`); ``run`` goes
+    straight to :func:`repro.core.sharing.solve_placed_batch`, which
+    flattens to ``(B·D, K)`` rows — the same padded power-of-two
+    buckets (and the same process-wide jitted solver cache) the
+    unplaced :class:`BatchPlan` uses.
+    """
+
+    kind = "placed-batch"
+    archs: tuple[str, ...]
+    grid: topology_mod.PlacedGrid
+    provenance: tuple[tuple[str, ...], ...]
+    solver_options: dict
+    backend: str               # resolved at compile time
+    requested_backend: str
+    strict: bool
+    jax_cutoff: int | None
+    chunk: int | None
+
+    def __len__(self) -> int:
+        return len(self.grid)
+
+    @property
+    def topo(self) -> topology_mod.Topology:
+        return self.grid.topology
+
+    @property
+    def engine(self) -> str:
+        return self.backend
+
+    @property
+    def bucket(self) -> tuple[int, int]:
+        """The padded jit-cache shape bucket of the flattened solve:
+        ``(bucket(B·D), K)`` — two placed sweeps of different raggedness
+        that land in one bucket share one compiled solver."""
+        B, D, K = self.grid.n.shape
+        return (backend_mod.bucket(B * D), K)
+
+    def _dispatch(self, backend, jax_cutoff) -> str:
+        if backend is None and jax_cutoff is None:
+            return self.backend
+        B, D, _ = self.grid.n.shape
+        return backend_mod.resolve(
+            backend or self.requested_backend, B * D,
+            jax_cutoff=jax_cutoff if jax_cutoff is not None
+            else self.jax_cutoff)
+
+    def run(self, *, cores=None, f=None, b_s=None, placement=None,
+            backend=None, jax_cutoff=None, chunk=None
+            ) -> PlacedBatchPrediction:
+        """Re-solve the placed batch.
+
+        ``cores``/``f``/``b_s`` swap grid numbers (anything
+        broadcastable to the padded ``(B, D, K)``; padding lanes stay
+        masked out regardless of what the broadcast writes there).
+        ``placement`` swaps the whole placement batch — a sequence of
+        B placement lists (:class:`repro.core.topology.Placed`) on the
+        plan's topology, re-packed without re-tracing the scenarios.
+        ``backend``/``jax_cutoff``/``chunk`` re-resolve dispatch for
+        this run only.
+        """
+        grid = self.grid
+        if placement is not None:
+            placement = [tuple(p) for p in placement]
+            if len(placement) != len(self):
+                raise ValueError(
+                    f"placement gives {len(placement)} scenarios for the "
+                    f"plan's {len(self)}")
+            grid = topology_mod.pack_placed(self.topo, placement,
+                                            strict=self.strict)
+        n_arr = _swap_array(grid.n, cores, "cores")
+        f_arr = _swap_array(grid.f, f, "f")
+        bs_arr = _swap_array(grid.bs, b_s, "b_s")
+        resolved = self._dispatch(backend, jax_cutoff)
+        shares = sharing.solve_placed_batch(
+            n_arr, f_arr, bs_arr, mask=grid.mask, backend=resolved,
+            chunk=chunk if chunk is not None else self.chunk,
+            **self.solver_options)
+        raw = topology_mod.TopologyBatchPrediction(grid=grid, shares=shares)
+        prov = self.provenance
+        if placement is not None:
+            # Swapped placements may change per-scenario group counts;
+            # keep labels where they still line up, "" beyond.
+            prov = tuple(
+                tuple(row[j] if j < len(row) else ""
+                      for j in range(len(pl)))
+                for row, pl in zip(prov, placement))
+        return PlacedBatchPrediction(archs=self.archs, engine=resolved,
+                                     raw=raw, provenance=prov)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class SimulatePlan(Plan):
     """B member programs encoded once → the desync event engine.
 
@@ -374,6 +475,9 @@ class SimulatePlan(Plan):
     t_max_conflict: tuple | None   # (i, t_i, t_0) of first mismatch
     requested_backend: str
     n_members: int
+    #: Fused batch×ensemble row origin: ``members[b] == (scenario,
+    #: member)``; None when rows map 1:1 to input scenarios.
+    members: tuple[tuple[int, int], ...] | None = None
 
     def __len__(self) -> int:
         return self.n_members
@@ -420,7 +524,8 @@ class SimulatePlan(Plan):
             self.enc, self.arch, merged, placement=self.placement,
             t_max=t_max, backend=resolved, on_deadlock=on_deadlock)
         return SimulationResult(arch=self.arch,
-                                engine=f"desync-{resolved}", raw=res)
+                                engine=f"desync-{resolved}", raw=res,
+                                members=self.members)
 
 
 # ---------------------------------------------------------------------------
@@ -432,6 +537,19 @@ def _compile_predict(scenario) -> Plan:
     if isinstance(scenario, ScenarioBatch):
         scenario.predictable  # cached O(B) validation; raises on misuse
         first = scenario.scenarios[0]
+        if scenario.is_placed:
+            grid = topology_mod.pack_placed(
+                first.topo, scenario.placements, strict=first.strict)
+            B, D, _ = grid.n.shape
+            resolved = backend_mod.resolve(first.backend, B * D,
+                                           jax_cutoff=first.jax_cutoff)
+            return PlacedBatchPlan(
+                archs=scenario.archs, grid=grid,
+                provenance=scenario.provenance,
+                solver_options=first.solver_options(),
+                backend=resolved, requested_backend=first.backend,
+                strict=first.strict, jax_cutoff=first.jax_cutoff,
+                chunk=first.chunk)
         n, f, bs, names = scenario.arrays
         resolved = backend_mod.resolve(first.backend, len(scenario),
                                        jax_cutoff=first.jax_cutoff)
@@ -478,7 +596,9 @@ def _compile_predict(scenario) -> Plan:
                       solver_options=scenario.solver_options())
 
 
-def _compile_simulate(scenario) -> SimulatePlan:
+def _compile_simulate(scenario, *,
+                      fuse_ensembles: bool = True) -> SimulatePlan:
+    member_map: tuple[tuple[int, int], ...] | None = None
     if isinstance(scenario, Scenario):
         members = [(scenario, b)
                    for b in range(scenario.noise.ensemble
@@ -486,13 +606,28 @@ def _compile_simulate(scenario) -> SimulatePlan:
         scenarios = [scenario]
     elif isinstance(scenario, ScenarioBatch):
         scenarios = list(scenario.scenarios)
-        for i, sc in enumerate(scenarios):
-            if sc.noise is not None and sc.noise.ensemble != 1:
-                raise ValueError(
-                    f"scenario {i} asks for a noise ensemble inside a "
-                    f"ScenarioBatch; ensembles are for single-scenario "
-                    f"simulate()")
-        members = [(sc, 0) for sc in scenarios]
+        if fuse_ensembles:
+            # Batch × ensemble composition: scenario i's E_i noise
+            # members flatten to adjacent rows of one (Σ E_i) run, each
+            # member on its own SplitMix64-derived seed stream.
+            members = [(sc, m) for sc in scenarios
+                       for m in range(sc.noise.ensemble if sc.noise
+                                      else 1)]
+            if len(members) != len(scenarios):
+                member_map = tuple(
+                    (i, m) for i, sc in enumerate(scenarios)
+                    for m in range(sc.noise.ensemble if sc.noise else 1))
+        else:
+            for i, sc in enumerate(scenarios):
+                if sc.noise is not None and sc.noise.ensemble != 1:
+                    raise ValueError(
+                        f"scenario {i} asks for a noise ensemble inside "
+                        f"a ScenarioBatch but fuse_ensembles=False "
+                        f"forces the legacy one-row-per-scenario path; "
+                        f"drop fuse_ensembles=False to run the whole "
+                        f"batch × ensemble grid in one call, or set "
+                        f"ensemble=1 on the scenario")
+            members = [(sc, 0) for sc in scenarios]
     else:
         raise TypeError(
             f"simulate() takes a Scenario or ScenarioBatch, got "
@@ -539,11 +674,12 @@ def _compile_simulate(scenario) -> SimulatePlan:
                         placement=placement, t_max_default=first.t_max,
                         t_max_conflict=t_max_conflict,
                         requested_backend=first.backend,
-                        n_members=len(members))
+                        n_members=len(members), members=member_map)
 
 
 def compile(scenario: Scenario | ScenarioBatch, *,
-            verb: str | None = None) -> Plan:
+            verb: str | None = None,
+            fuse_ensembles: bool = True) -> Plan:
     """Trace a scenario (or batch) into a frozen, re-runnable plan.
 
     ``verb`` picks the engine family — ``"predict"`` (the Eq. 4–5
@@ -553,6 +689,13 @@ def compile(scenario: Scenario | ScenarioBatch, *,
     simulation plan, group-mode scenarios to a prediction plan (pass
     ``verb="simulate"`` to run groups through the event engine, exactly
     like calling :func:`repro.api.simulate` on them).
+
+    ``fuse_ensembles`` (simulate only, default on) expands each batch
+    scenario's ``with_noise(ensemble=E)`` members into the compiled
+    run — B scenarios × E seeds as one ``(Σ E_i)``-row engine call,
+    with the row origin recorded on ``plan.members`` /
+    ``result.members``.  ``fuse_ensembles=False`` forces the legacy
+    one-row-per-scenario contract, which rejects inner ensembles.
 
     All build-time work happens here — registry resolution already
     happened when the scenario was built; this adds validation, array
@@ -570,6 +713,6 @@ def compile(scenario: Scenario | ScenarioBatch, *,
     if verb == "predict":
         return _compile_predict(scenario)
     if verb == "simulate":
-        return _compile_simulate(scenario)
+        return _compile_simulate(scenario, fuse_ensembles=fuse_ensembles)
     raise ValueError(
         f"unknown verb {verb!r}; expected 'predict' or 'simulate'")

@@ -31,6 +31,7 @@ import numpy as np
 from ..core.desync import end_spread, start_spread
 from ..core.desync_batch import BatchRunResult
 from ..core.sharing import BatchSharePrediction, SharePrediction
+from ..core.topology import TopologyBatchPrediction
 
 SCHEMA_VERSION = 1
 
@@ -250,12 +251,85 @@ class BatchPrediction:
 
 
 @dataclasses.dataclass(frozen=True)
+class PlacedBatchPrediction:
+    """B placed-topology solves from one flattened grid solve.
+
+    The array surface exposes the solver's padded ``(B, D, K)`` grid
+    (``D`` topology domains, up to ``K`` groups each, masked occupancy);
+    indexing materializes row *i* as exactly the :class:`Prediction` a
+    lone placed ``predict`` would have returned — on the numpy backend
+    bit-for-bit, since padded grid cells are exactly neutral.
+    """
+
+    archs: tuple[str, ...]   # (B,) per-scenario architecture labels
+    engine: str              # solver backend: "numpy" | "jax"
+    raw: TopologyBatchPrediction
+    provenance: tuple[tuple[str, ...], ...]  # (B, J) input-order labels
+
+    @property
+    def arch(self) -> str:
+        return self.archs[0] if len(set(self.archs)) == 1 else "mixed"
+
+    @property
+    def topology(self):
+        return self.raw.topology
+
+    # Array surface (the solver's native padded-grid result).
+
+    @property
+    def bw_group(self) -> tuple[tuple[float, ...], ...]:
+        """Per scenario, attained bandwidths in input placement order."""
+        return self.raw.bw_group
+
+    @property
+    def total_bw(self) -> np.ndarray:
+        return self.raw.total_bw
+
+    @property
+    def grid(self):
+        """The padded ``(B, D, K)`` solver result
+        (:class:`repro.core.sharing.PlacedBatchSharePrediction`)."""
+        return self.raw.shares
+
+    def __len__(self) -> int:
+        return len(self.raw)
+
+    def __getitem__(self, i: int) -> Prediction:
+        return from_topology_prediction(
+            self.raw.scenario(i), arch=self.archs[i],
+            provenance=self.provenance[i])
+
+    def __iter__(self):
+        return (self[i] for i in range(len(self)))
+
+    def iter_dicts(self):
+        """Lazily yield one export dict per scenario (row-at-a-time
+        working set, matching :meth:`BatchPrediction.iter_dicts`)."""
+        return (self[i].to_dict() for i in range(len(self)))
+
+    def to_dicts(self) -> list[dict]:
+        return list(self.iter_dicts())
+
+
+@dataclasses.dataclass(frozen=True)
 class SimulationResult:
     """A desync run (B noise draws / candidates × R ranks), unified."""
 
     arch: str
     engine: str            # "desync-numpy" | "desync-jax"
     raw: BatchRunResult
+    #: Flattened-row origin of a fused batch×ensemble run:
+    #: ``members[b] == (scenario_index, member_index)``.  None when the
+    #: run was not ensemble-expanded (every row is its own scenario).
+    members: tuple[tuple[int, int], ...] | None = None
+
+    def rows_for(self, scenario: int) -> tuple[int, ...]:
+        """Flattened row indices of one input scenario's ensemble
+        members (``(scenario,)`` itself when the run is unfused)."""
+        if self.members is None:
+            return (scenario,)
+        return tuple(b for b, (s, _) in enumerate(self.members)
+                     if s == scenario)
 
     @property
     def n_scenarios(self) -> int:
@@ -327,7 +401,8 @@ def iter_ndjson(results: Iterable[Prediction | BatchPrediction]
     :func:`dump_ndjson`, for callers that pipe lines elsewhere."""
     for res in results:
         rows = res.iter_dicts() \
-            if isinstance(res, BatchPrediction) else [res.to_dict()]
+            if isinstance(res, (BatchPrediction, PlacedBatchPrediction)) \
+            else [res.to_dict()]
         for row in rows:
             yield json.dumps(row, sort_keys=True)
 

@@ -41,7 +41,7 @@ import numpy as np
 
 from ..core.sharing import Group
 from ..core.table2 import KernelSpec
-from ..core.topology import Topology
+from ..core.topology import Placed, Topology
 from ..core.topology import preset as topology_preset
 from .registry import ResolvedSpec, resolve
 
@@ -326,11 +326,15 @@ class Scenario:
 class ScenarioBatch:
     """B scenarios solved (or simulated) together.
 
-    For ``predict``, scenarios must be group-mode and unplaced: the
-    batch packs them into rectangular ``(B, G)`` arrays (ragged lists
-    padded with neutral ``n = 0`` groups).  For ``simulate``, scenarios
-    must share the rank count, topology, and placement (the batched
-    desync engine's contract); programs may differ freely.
+    For ``predict``, scenarios are group-mode: unplaced batches pack
+    into rectangular ``(B, G)`` arrays (ragged lists padded with
+    neutral ``n = 0`` groups); batches placed on **one shared
+    topology** pack into a ``(B, D, K)`` occupancy-masked grid and
+    solve as one flattened call (mixing placed and unplaced scenarios
+    is rejected).  For ``simulate``, scenarios must share the rank
+    count, topology, and placement (the batched desync engine's
+    contract); programs may differ freely, and each scenario's
+    ``with_noise(ensemble=E)`` members fuse into the same batched run.
     """
 
     scenarios: tuple[Scenario, ...]
@@ -380,6 +384,49 @@ class ScenarioBatch:
         return n, f, bs, tuple(tuple(row) for row in names)
 
     @functools.cached_property
+    def is_placed(self) -> bool:
+        """True when the batch is a topology-placed solve: every scenario
+        placed on **one shared topology**.  Raises on incoherent mixes —
+        placed next to unplaced scenarios, differing topologies, or a
+        topology with unplaced groups — because those have no meaningful
+        common grid."""
+        flags = [sc.is_placed or sc.topo is not None
+                 for sc in self.scenarios]
+        if not any(flags):
+            return False
+        first = self.scenarios[0]
+        for i, (sc, flag) in enumerate(zip(self.scenarios, flags)):
+            if not flag:
+                raise ValueError(
+                    f"scenario {i} is unplaced but the batch has placed "
+                    f"scenarios; a batch is either all placed on one "
+                    f"topology or all single-domain")
+            if sc.topo is None:
+                raise ValueError(
+                    f"scenario {i} has .placed groups but no topology; "
+                    f"add .using(<topology or preset name>)")
+            if sc.topo != first.topo:
+                raise ValueError(
+                    f"scenario {i} uses a different topology than "
+                    f"scenario 0; a placed batch shares one topology")
+            missing = [r.tag for r in sc.runs if r.domain is None]
+            if missing:
+                raise ValueError(
+                    f"scenario {i}: groups {missing} have no domain but "
+                    f"the scenario has a topology; place every group "
+                    f"with .placed(kernel, n, domain)")
+        return True
+
+    @functools.cached_property
+    def placements(self) -> "tuple[tuple[Placed, ...], ...]":
+        """Per-scenario placement lists of a placed batch (input order)."""
+        if not self.is_placed:
+            raise ValueError("batch has no placed scenarios")
+        return tuple(
+            tuple(Placed(r.group(sc.arch), r.domain) for r in sc.runs)
+            for sc in self.scenarios)
+
+    @functools.cached_property
     def predictable(self) -> bool:
         """Validate the batch for ``predict`` (cached, so repeated
         predicts on one batch pay the O(B) scan once)."""
@@ -388,11 +435,7 @@ class ScenarioBatch:
                 raise ValueError(
                     f"scenario {i} describes rank programs; use "
                     f"simulate(batch)")
-            if sc.is_placed or sc.topo is not None:
-                raise ValueError(
-                    f"scenario {i} is placed on a topology; batched "
-                    f"predict covers single-domain scenarios (solve "
-                    f"placed scenarios one at a time)")
+        self.is_placed  # coherence: all placed on one topology, or none
         return True
 
     @functools.cached_property

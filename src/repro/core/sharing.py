@@ -474,6 +474,109 @@ def solve_batch(n, f, bs, names=None, *,
                                 util=util, bw_group=bw, names=names)
 
 
+# ---------------------------------------------------------------------------
+# Placement-batched solver: B scenarios × D domains × K groups in one call.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacedBatchSharePrediction:
+    """Solution of B placed scenarios over a padded domain grid.
+
+    The axes are ``(B, D, K)``: B scenarios, each padded to D contention
+    domains of up to K groups.  ``mask`` marks the *occupied* lanes —
+    cells that carry a real placement (a genuine ``n = 0`` group is
+    occupied; a padding lane is not).  Each ``(b, d)`` row is an
+    independent Eq. 4–5 instance, so ``b_overlap`` and ``util`` are
+    per-domain ``(B, D)`` arrays.
+    """
+
+    n: np.ndarray          # (B, D, K) thread counts (masked lanes 0)
+    f: np.ndarray          # (B, D, K) request fractions (masked lanes 0)
+    bs: np.ndarray         # (B, D, K) saturated bandwidths (masked lanes 0)
+    mask: np.ndarray       # (B, D, K) bool, True = occupied lane
+    b_overlap: np.ndarray  # (B, D)   Eq. 4 envelopes per domain [GB/s]
+    alphas: np.ndarray     # (B, D, K) Eq. 5 request shares within a domain
+    util: np.ndarray       # (B, D)   interface utilization per domain
+    bw_group: np.ndarray   # (B, D, K) attained bandwidth per lane [GB/s]
+    names: tuple[tuple[tuple[str, ...], ...], ...] | None = None
+
+    def __len__(self) -> int:
+        return self.bw_group.shape[0]
+
+    @property
+    def bw_per_core(self) -> np.ndarray:
+        return np.divide(self.bw_group, self.n,
+                         out=np.zeros_like(self.bw_group),
+                         where=self.n > 0)
+
+    @property
+    def domain_bw(self) -> np.ndarray:
+        """(B, D) total attained bandwidth per domain [GB/s]."""
+        return self.bw_group.sum(axis=-1)
+
+    @property
+    def total_bw(self) -> np.ndarray:
+        """(B,) aggregate attained bandwidth across every domain."""
+        return self.bw_group.sum(axis=(-1, -2))
+
+
+def solve_placed_batch(n, f, bs, *, mask=None, names=None,
+                       utilization: str | float = "recursion",
+                       p0_factor: float = 0.5,
+                       saturated: bool | None = None,
+                       backend: str = "auto", jax_cutoff: int | None = None,
+                       chunk: int | None = None
+                       ) -> PlacedBatchSharePrediction:
+    """Solve Eqs. 4–5 for B placed scenarios in one flattened call.
+
+    ``n``, ``f``, ``bs``: array-likes of shape ``(B, D, K)`` (a single
+    ``(D, K)`` scenario is promoted to B = 1) — B scenarios, each padded
+    to a common grid of D contention domains with up to K groups per
+    domain.  Every ``(b, d)`` row is an independent Eq. 4–5 instance
+    (memory controllers of different domains do not contend), so the
+    whole grid flattens to one ``(B·D, K)`` :func:`solve_arrays` call —
+    the same padded power-of-two bucketing (and therefore the same
+    process-wide jit cache) the unplaced batched path uses, so ragged
+    placement sweeps of nearby sizes share one compiled solver.
+
+    ``mask`` marks occupied lanes (default ``n > 0``).  Masked-out lanes
+    are forced to the neutral ``n = f = bs = 0`` *before* the solve —
+    whatever garbage the padding carries (even NaN) cannot perturb the
+    occupied lanes, and empty padded domains attain exactly zero
+    bandwidth.  Dispatch (``backend``/``jax_cutoff``/``chunk``) resolves
+    on the flattened ``B·D`` row count through the substrate policy.
+    """
+    n = np.asarray(n, dtype=np.float64)
+    if n.ndim == 2:
+        n = n[None]
+    f = np.broadcast_to(np.asarray(f, dtype=np.float64), n.shape)
+    bs = np.broadcast_to(np.asarray(bs, dtype=np.float64), n.shape)
+    if n.ndim != 3:
+        raise ValueError(
+            f"placed batches are (B, D, K) arrays, got shape {n.shape}")
+    if mask is None:
+        mask = n > 0
+    else:
+        mask = np.broadcast_to(np.asarray(mask, dtype=bool), n.shape)
+    # Select, not multiply: np.where drops poisoned padding (NaN/inf
+    # included) instead of propagating it through 0 * NaN.
+    zero = np.zeros_like(n)
+    n = np.where(mask, n, zero)
+    f = np.where(mask, f, zero)
+    bs = np.where(mask, bs, zero)
+    B, D, K = n.shape
+    b, alphas, util, bw = solve_arrays(
+        n.reshape(B * D, K), f.reshape(B * D, K), bs.reshape(B * D, K),
+        backend=backend, utilization=utilization, p0_factor=p0_factor,
+        saturated=saturated, jax_cutoff=jax_cutoff, chunk=chunk)
+    return PlacedBatchSharePrediction(
+        n=n, f=f, bs=bs, mask=mask,
+        b_overlap=b.reshape(B, D), alphas=alphas.reshape(B, D, K),
+        util=util.reshape(B, D), bw_group=bw.reshape(B, D, K),
+        names=names)
+
+
 def groups_to_arrays(scenarios: Sequence[Sequence[Group]]
                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
                                 tuple[tuple[str, ...], ...]]:

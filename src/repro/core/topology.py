@@ -29,8 +29,9 @@ import numpy as np
 
 from .machine import (BDW1, BDW2, CLX, ROME, TPU_V5E, MachineModel,
                       TpuModel)
-from .sharing import (BatchSharePrediction, Group, SharePrediction,
-                      groups_to_arrays, solve_batch)
+from .sharing import (BatchSharePrediction, Group, PlacedBatchSharePrediction,
+                      SharePrediction, groups_to_arrays, solve_batch,
+                      solve_placed_batch)
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +217,190 @@ def predict_placed(topology: Topology, placements: Sequence[Placed], *,
 
     return TopologyPrediction(topology=topology, placements=placements,
                               by_domain=by_domain, bw_group=tuple(bw_flat))
+
+
+# ---------------------------------------------------------------------------
+# Placement-batched solve: B placements on one topology, one flattened call
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacedGrid:
+    """B ragged placements packed onto a common ``(B, D, K)`` grid.
+
+    ``D`` is the topology's full leaf count (depth-first, matching
+    :attr:`Topology.domains`); ``K`` is the largest per-domain group count
+    across the whole batch.  ``slots[b][j]`` gives the ``(d, k)`` cell
+    scenario *b*'s *j*-th placement landed in, so results on the grid can
+    be read back in input order.
+    """
+
+    topology: Topology
+    placements: tuple[tuple[Placed, ...], ...]
+    n: np.ndarray     # (B, D, K)
+    f: np.ndarray     # (B, D, K)
+    bs: np.ndarray    # (B, D, K)
+    mask: np.ndarray  # (B, D, K) bool, True = occupied
+    slots: tuple[tuple[tuple[int, int], ...], ...]
+
+    def __len__(self) -> int:
+        return len(self.placements)
+
+
+def pack_placed(topology: Topology,
+                placements_batch: Sequence[Sequence[Placed]], *,
+                strict: bool = True) -> PlacedGrid:
+    """Pad B heterogeneous placements to one occupancy-masked grid.
+
+    Groups keep their placement order within each domain (the same order
+    :func:`predict_placed` packs them in, so grid solves are bit-for-bit
+    comparable).  ``strict=True`` applies the same unknown-domain and
+    overcommit checks as :func:`predict_placed`, per scenario.
+    """
+    placements_batch = tuple(tuple(p) for p in placements_batch)
+    names = topology.domain_names
+    dom_index = {n: i for i, n in enumerate(names)}
+    caps = {n: topology.domain(n).n_cores for n in names}
+    B, D = len(placements_batch), len(names)
+
+    per_scenario: list[dict[int, list[tuple[int, Group]]]] = []
+    K = 1
+    for b, placements in enumerate(placements_batch):
+        per_domain: dict[int, list[tuple[int, Group]]] = {}
+        used = dict.fromkeys(names, 0.0)
+        for idx, p in enumerate(placements):
+            if p.domain not in dom_index:
+                raise KeyError(
+                    f"scenario {b}: placement {idx} names unknown domain "
+                    f"{p.domain!r}; available: {list(names)}")
+            per_domain.setdefault(dom_index[p.domain], []).append(
+                (idx, p.group))
+            used[p.domain] += p.group.n
+        if strict:
+            for name in names:
+                if used[name] > caps[name]:
+                    raise ValueError(
+                        f"scenario {b}: domain {name!r} overcommitted: "
+                        f"{used[name]:g} threads placed on {caps[name]} "
+                        f"cores (pass strict=False to allow)")
+        per_scenario.append(per_domain)
+        K = max(K, *(len(v) for v in per_domain.values()), 1)
+
+    n = np.zeros((B, D, K))
+    f = np.zeros((B, D, K))
+    bs = np.zeros((B, D, K))
+    mask = np.zeros((B, D, K), dtype=bool)
+    slots: list[tuple[tuple[int, int], ...]] = []
+    for b, per_domain in enumerate(per_scenario):
+        slot_of: dict[int, tuple[int, int]] = {}
+        for d, entries in per_domain.items():
+            for k, (idx, g) in enumerate(entries):
+                n[b, d, k] = g.n
+                f[b, d, k] = g.f
+                bs[b, d, k] = g.bs
+                mask[b, d, k] = True
+                slot_of[idx] = (d, k)
+        slots.append(tuple(slot_of[j]
+                           for j in range(len(placements_batch[b]))))
+    return PlacedGrid(topology=topology, placements=placements_batch,
+                      n=n, f=f, bs=bs, mask=mask, slots=tuple(slots))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologyBatchPrediction:
+    """B placed-topology solutions from one flattened grid solve.
+
+    ``scenario(i)`` materializes the i-th result as the
+    :class:`TopologyPrediction` a lone :func:`predict_placed` call would
+    have returned — on the numpy path bit-for-bit, because padded grid
+    rows and trailing zero lanes are exactly neutral.
+    """
+
+    grid: PlacedGrid
+    shares: PlacedBatchSharePrediction
+
+    def __len__(self) -> int:
+        return len(self.grid)
+
+    @property
+    def topology(self) -> Topology:
+        return self.grid.topology
+
+    @property
+    def total_bw(self) -> np.ndarray:
+        """(B,) aggregate attained bandwidth per scenario [GB/s]."""
+        return self.shares.total_bw
+
+    @property
+    def bw_group(self) -> tuple[tuple[float, ...], ...]:
+        """Per scenario, attained bandwidths in input placement order."""
+        return tuple(
+            tuple(float(self.shares.bw_group[b, d, k])
+                  for d, k in self.grid.slots[b])
+            for b in range(len(self)))
+
+    def _group_at(self, i: int, j: int) -> Group:
+        """Input placement j's group, with numbers read back from the
+        solved grid — so ``plan.run(f=..., cores=...)`` number swaps
+        show up in materialized results, not just in the arrays."""
+        d, k = self.grid.slots[i][j]
+        g = self.grid.placements[i][j].group
+        n_, f_, bs_ = (float(self.shares.n[i, d, k]),
+                       float(self.shares.f[i, d, k]),
+                       float(self.shares.bs[i, d, k]))
+        if (g.n, g.f, g.bs) == (n_, f_, bs_):
+            return g
+        return dataclasses.replace(g, n=int(n_), f=f_, bs=bs_)
+
+    def scenario(self, i: int) -> TopologyPrediction:
+        """The i-th solution, shaped exactly like :func:`predict_placed`."""
+        placements = tuple(
+            dataclasses.replace(p, group=self._group_at(i, j))
+            for j, p in enumerate(self.grid.placements[i]))
+        names = self.topology.domain_names
+        by_domain: dict[str, SharePrediction] = {}
+        slot_to_idx = {s: j for j, s in enumerate(self.grid.slots[i])}
+        for d, name in enumerate(names):
+            ks = [k for k in range(self.grid.mask.shape[2])
+                  if self.grid.mask[i, d, k]]
+            if not ks:
+                by_domain[name] = SharePrediction(
+                    groups=(), b_overlap=0.0, alphas=(), bw_group=())
+                continue
+            by_domain[name] = SharePrediction(
+                groups=tuple(placements[slot_to_idx[(d, k)]].group
+                             for k in ks),
+                b_overlap=float(self.shares.b_overlap[i, d]),
+                alphas=tuple(float(self.shares.alphas[i, d, k])
+                             for k in ks),
+                bw_group=tuple(float(self.shares.bw_group[i, d, k])
+                               for k in ks))
+        return TopologyPrediction(
+            topology=self.topology, placements=placements,
+            by_domain=by_domain,
+            bw_group=tuple(float(self.shares.bw_group[i, d, k])
+                           for d, k in self.grid.slots[i]))
+
+
+def predict_placed_batch(topology: Topology,
+                         placements_batch: Sequence[Sequence[Placed]], *,
+                         strict: bool = True, **solver_kwargs
+                         ) -> TopologyBatchPrediction:
+    """Solve B placements of one topology as a single flattened call.
+
+    Packs the batch to a common ``(B, D, K)`` grid
+    (:func:`pack_placed`) and runs every domain of every scenario
+    through one :func:`repro.core.sharing.solve_placed_batch` — the
+    grid flattens to ``(B·D, K)`` rows, so backend dispatch and the
+    process-wide jit cache see the same power-of-two buckets the
+    unplaced batched path uses.  ``solver_kwargs`` (``utilization``,
+    ``saturated``, ``p0_factor``, ``backend``, ``jax_cutoff``,
+    ``chunk``) forward to the solver.
+    """
+    grid = pack_placed(topology, placements_batch, strict=strict)
+    shares = solve_placed_batch(grid.n, grid.f, grid.bs, mask=grid.mask,
+                                **solver_kwargs)
+    return TopologyBatchPrediction(grid=grid, shares=shares)
 
 
 def predict_single_domain(groups: Sequence[Group],

@@ -125,11 +125,24 @@ def plan_pod_overlap(terms: RooflineTerms, *,
 
 @dataclasses.dataclass(frozen=True)
 class PodPlanEvaluation:
-    """Simulated outcome of one candidate per-chip load assignment."""
+    """Simulated outcome of one candidate per-chip load assignment.
+
+    With a noise ensemble (``evaluate_pod_plans(..., ensemble=E)``)
+    ``t_step`` and ``bwd_spread`` are means over the candidate's E
+    members and ``t_step_worst`` is the slowest member — rank on it to
+    pick plans robust to launch jitter, not just fast on the noiseless
+    trace.
+    """
 
     chip_load: tuple[float, ...]
     t_step: float        # makespan: gradient allreduce gates on all chips
     bwd_spread: float    # spread of backward-pass finish times (desync)
+    n_members: int = 1
+    t_step_worst: float = 0.0
+
+    def __post_init__(self):
+        if self.t_step_worst == 0.0:
+            object.__setattr__(self, "t_step_worst", self.t_step)
 
     @property
     def balanced(self) -> bool:
@@ -141,7 +154,10 @@ def evaluate_pod_plans(terms: RooflineTerms,
                        topology: Topology | None = None,
                        backward_frac: float = 2 / 3,
                        tpu: TpuModel = TPU_V5E,
-                       backend: str = "numpy"
+                       backend: str = "numpy",
+                       noise_s: float = 0.0,
+                       seed: int = 0,
+                       ensemble: int = 1
                        ) -> list[PodPlanEvaluation]:
     """Evaluate B candidate pod plans as **one** batched desync run.
 
@@ -154,9 +170,15 @@ def evaluate_pod_plans(terms: RooflineTerms,
     chip delays the allreduce for everyone, exactly the effect
     :meth:`PodOverlapPlan.t_step` approximates analytically.
 
-    All candidates advance in one :meth:`DesyncSimulator.run_batch` call;
-    results are returned in candidate order (``min(..., key=t_step)`` picks
-    the winner).
+    ``noise_s`` adds per-chip exponential launch jitter with that mean;
+    ``ensemble`` simulates each candidate under that many independent
+    seeds (streams split per ``(seed, member)``, see
+    :func:`repro.api.plan.derive_member_seed`).  The whole candidate ×
+    seed grid — B·E rows — still advances as **one** compiled engine
+    call; per-candidate statistics are reduced from the fused result.
+
+    Results are returned in candidate order (``min(..., key=t_step)``
+    picks the winner).
     """
     topo = topology if topology is not None else tpu_pod(tpu)
     chips = topo.domain_names
@@ -166,6 +188,12 @@ def evaluate_pod_plans(terms: RooflineTerms,
             raise ValueError(
                 f"candidate {i} has {len(load)} loads for "
                 f"{len(chips)} chips")
+    if ensemble < 1:
+        raise ValueError(f"ensemble must be >= 1, got {ensemble}")
+    if ensemble > 1 and noise_s <= 0.0:
+        raise ValueError(
+            f"ensemble={ensemble} without noise is {ensemble} identical "
+            f"runs; pass noise_s > 0 (per-chip launch jitter mean)")
 
     bwd = Phase("bwd", flops=terms.flops * backward_frac,
                 hbm_bytes=terms.hbm_bytes * backward_frac)
@@ -186,20 +214,29 @@ def evaluate_pod_plans(terms: RooflineTerms,
         if drain.hbm_bytes > 0:
             sc = sc.step(fbs["grad_drain"], drain.hbm_bytes,
                          name="grad_drain", tag="grad_drain")
+        if noise_s > 0.0 or ensemble > 1:
+            sc = sc.with_noise(noise_s, seed=seed, ensemble=ensemble)
         scens.append(sc)
-    # Compile the candidate batch once (program encoding, placement
-    # validation, backend selection), then run; the jitted engine for
-    # this topology's shape bucket is cached process-wide, so repeated
-    # searches on one pod compile once.  Plans are compared on t_step;
-    # a masked deadlocked candidate would win with a bogus short step,
-    # so abort loudly instead.
+    # Compile the candidate × seed grid once (program encoding, noise
+    # draws, placement validation, backend selection), then run; the
+    # jitted engine for this topology's shape bucket is cached
+    # process-wide, so repeated searches on one pod compile once.
+    # Plans are compared on t_step; a masked deadlocked candidate would
+    # win with a bogus short step, so abort loudly instead.
     plan = compile_plan(ScenarioBatch.of(scens), verb="simulate")
     res = plan.run(t_max=1e6, backend=backend, on_deadlock="raise")
-    return [PodPlanEvaluation(
-        chip_load=load,
-        t_step=res.makespan(b),
-        bwd_spread=res.end_spread("bwd", b))
-        for b, load in enumerate(candidate_loads)]
+    out = []
+    for i, load in enumerate(candidate_loads):
+        rows = res.rows_for(i)
+        steps = [res.makespan(b) for b in rows]
+        spreads = [res.end_spread("bwd", b) for b in rows]
+        out.append(PodPlanEvaluation(
+            chip_load=load,
+            t_step=sum(steps) / len(steps),
+            bwd_spread=sum(spreads) / len(spreads),
+            n_members=len(rows),
+            t_step_worst=max(steps)))
+    return out
 
 
 def best_pod_plan(terms: RooflineTerms,

@@ -320,11 +320,29 @@ def test_noise_ensemble_expands_to_batch():
     assert len({round(float(t), 15) for t in res.t_end}) > 1
 
 
-def test_simulation_batch_forbids_inner_ensembles():
-    sc = (api.Scenario.on("CLX").ranks(2).step("DCOPY", 1e6)
-          .with_noise(1e-5, ensemble=2))
-    with pytest.raises(ValueError, match="ensemble"):
-        api.simulate(api.ScenarioBatch.of([sc, sc]))
+def test_simulation_batch_fuses_inner_ensembles():
+    # Batch × ensemble composition: each scenario's E members become
+    # adjacent rows of one fused run, mapped by result.members.
+    sc_a = (api.Scenario.on("CLX").ranks(2).step("DCOPY", 1e6)
+            .with_noise(1e-5, seed=1, ensemble=2))
+    sc_b = (api.Scenario.on("CLX").ranks(2).step("DCOPY", 2e6)
+            .with_noise(1e-5, seed=2, ensemble=3))
+    res = api.simulate(api.ScenarioBatch.of([sc_a, sc_b]))
+    assert res.n_scenarios == 5
+    assert res.members == ((0, 0), (0, 1), (1, 0), (1, 1), (1, 2))
+    assert res.rows_for(0) == (0, 1)
+    assert res.rows_for(1) == (2, 3, 4)
+    # Only forcing the legacy one-row-per-scenario path raises, with a
+    # suggestion pointing back at the fused default.
+    with pytest.raises(ValueError, match="fuse_ensembles"):
+        api.simulate(api.ScenarioBatch.of([sc_a, sc_b]),
+                     fuse_ensembles=False)
+    # ensemble=1 batches stay legal (and unmapped) on the legacy path.
+    one = api.simulate(api.ScenarioBatch.of(
+        [sc_a.with_noise(1e-5, seed=1), sc_b.with_noise(1e-5, seed=2)]),
+        fuse_ensembles=False)
+    assert one.n_scenarios == 2
+    assert one.members is None
 
 
 def test_simulation_result_analysis_helpers():

@@ -372,6 +372,115 @@ def test_jit_cache_shared_across_same_bucket_plans():
         p2.run(backend="jax").bw_group, ref.bw_group)
 
 
+def _placed_sweep(b, *, ragged=False, arch="CLX", **options):
+    """B placed scenarios on CLX-2S; ``ragged=True`` varies the
+    per-scenario group count (1–2 per domain) without changing the
+    padded grid bucket."""
+    scens = []
+    for i in range(b):
+        sc = (api.Scenario.on(arch, **options).using("CLX-2S")
+              .placed("DCOPY", 1 + i % 8, "CLX/s0/d0")
+              .placed("DDOT2", 1 + (i * 3) % 8, "CLX/s1/d0"))
+        if not ragged or i % 2:
+            sc = sc.placed("DAXPY", 1 + i % 4, "CLX/s0/d0")
+        scens.append(sc)
+    return api.ScenarioBatch.of(scens)
+
+
+@pytest.mark.skipif(not backend.HAVE_JAX, reason="jax not importable")
+def test_jit_cache_shared_across_placement_axis_buckets():
+    # Two placed batches of different raggedness flatten to (B·D, K)
+    # rows that pad into one bucket — the second run must reuse the
+    # first's compiled solver through the substrate cache.
+    p1 = api.compile(_placed_sweep(70, ragged=True))
+    assert isinstance(p1, api.PlacedBatchPlan)
+    p1.run(backend="jax")
+    # B·D = 70·2 = 140 -> 256-row bucket; K = 2 groups per domain max.
+    assert p1.bucket == (256, 2)
+    s1 = backend.cache_stats()
+    p2 = api.compile(_placed_sweep(100))
+    assert p2.bucket == p1.bucket
+    p2.run(backend="jax")
+    s2 = backend.cache_stats()
+    assert s2["misses"] == s1["misses"]
+    assert s2["hits"] == s1["hits"] + 1
+    # And an *unplaced* batch of the same flattened bucket (256 rows,
+    # 2 groups, same n_max bucket of 16) shares the very same compiled
+    # solver: placement adds no cache axis.
+    base = api.Scenario.on("CLX").run("DCOPY", 1).run("DDOT2", 1)
+    na = 1 + np.arange(150) % 8
+    unplaced = api.compile(base.batch(np.stack(
+        [na, np.full_like(na, 8)], axis=-1)))
+    assert unplaced.bucket == (256, 2)
+    s3 = backend.cache_stats()
+    unplaced.run(backend="jax")
+    s4 = backend.cache_stats()
+    assert s4["misses"] == s3["misses"]
+
+
+def test_placed_batch_plan_bit_for_bit():
+    batch = _placed_sweep(9, ragged=True)
+    plan = api.compile(batch)
+    assert plan.kind == "placed-batch"
+    res = plan.run(backend="numpy")
+    for i, sc in enumerate(batch.scenarios):
+        assert res[i] == api.predict(sc, backend="numpy")
+    # run() == predict(batch), and re-running is deterministic.
+    again = api.predict(batch, backend="numpy")
+    for i in range(len(batch)):
+        assert again[i] == res[i]
+
+
+def test_placed_batch_plan_swaps():
+    batch = _placed_sweep(6)
+    plan = api.compile(batch)
+    ref = plan.run(backend="numpy")
+    got = plan.run(f=0.4, backend="numpy")
+    assert all(g.f == 0.4 for g in got[0].groups)
+    assert got[0] != ref[0]
+    # Swapping the placement re-packs on the same topology without
+    # re-tracing: moving every group to one domain matches a fresh
+    # compile of so-placed scenarios.
+    from repro.core.topology import Placed
+    moved = [[Placed(p.group, "CLX/s1/d0") for p in row]
+             for row in batch.placements]
+    got2 = plan.run(placement=moved, backend="numpy")
+    fresh = api.ScenarioBatch.of([
+        api.Scenario.on("CLX").using("CLX-2S").options(strict=False)
+        .placed("DCOPY", sc.runs[0].n, "CLX/s1/d0")
+        .placed("DDOT2", sc.runs[1].n, "CLX/s1/d0")
+        .placed("DAXPY", sc.runs[2].n, "CLX/s1/d0")
+        for sc in batch.scenarios])
+    # strict differs between plan (True) and fresh batch; capacity
+    # holds here, so numbers must agree exactly.
+    ref2 = api.predict(fresh, backend="numpy")
+    for i in range(len(batch)):
+        assert got2[i].bw_group == ref2[i].bw_group
+    with pytest.raises(ValueError, match="scenarios for the plan's"):
+        plan.run(placement=moved[:2])
+
+
+def test_fused_ensemble_seed_stability():
+    # Pinned member results: the fused batch×ensemble path must keep
+    # every (scenario, member) row bit-identical to the explicit
+    # cross-product the known-issues doc used to prescribe (one
+    # single-scenario ensemble simulate per batch row).
+    scens = [(api.Scenario.on("CLX").ranks(3)
+              .step("DCOPY", 1e6 * (i + 1), tag="w")
+              .barrier()
+              .with_noise(2e-5, seed=11 + i, ensemble=3))
+             for i in range(3)]
+    fused = api.simulate(api.ScenarioBatch.of(scens))
+    assert fused.n_scenarios == 9
+    for i, sc in enumerate(scens):
+        solo = api.simulate(sc)          # explicit cross-product row
+        rows = fused.rows_for(i)
+        assert len(rows) == 3
+        for m, b in enumerate(rows):
+            assert solo.records(m) == fused.records(b)
+            assert solo.t_end[m] == fused.t_end[b]
+
+
 def test_chunked_solve_bit_for_bit(monkeypatch):
     rng = np.random.default_rng(5)
     n = rng.integers(0, 12, size=(23, 3)).astype(float)
