@@ -26,8 +26,8 @@ from repro.api import dump_dicts
 
 from . import (api_overhead, calibrate_roundtrip, desync_scaling,
                fig6_full_domain, fig7_symmetric, fig8_error, fig9_pairings,
-               hpcg_desync, placement_scaling, plan_overhead, table2_kernels,
-               tpu_overlap)
+               grad_calibration, hpcg_desync, placement_scaling,
+               plan_overhead, table2_kernels, tpu_overlap)
 
 MODULES = {
     "table2": table2_kernels,
@@ -42,6 +42,7 @@ MODULES = {
     "api_overhead": api_overhead,
     "plan_overhead": plan_overhead,
     "placement_scaling": placement_scaling,
+    "grad": grad_calibration,
 }
 
 

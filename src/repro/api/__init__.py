@@ -44,8 +44,9 @@ from .registry import (ResolvedSpec, from_loop_features, known_archs,
                        known_kernels, resolve, suggest,
                        unknown_key_error, unknown_key_message)
 from .results import (BatchPrediction, DomainShare, GroupShare,
-                      PlacedBatchPrediction, Prediction, SimulationResult,
-                      dump_dicts, dump_ndjson, iter_ndjson, load_ndjson)
+                      PlacedBatchPrediction, Prediction, Sensitivities,
+                      SimulationResult, dump_dicts, dump_ndjson,
+                      iter_ndjson, load_ndjson)
 from .scenario import (DEFAULT_WORK_BYTES, Noise, RunSpec, Scenario,
                        ScenarioBatch, StepSpec)
 
@@ -58,6 +59,6 @@ __all__ = [
     "resolve", "ResolvedSpec", "from_loop_features", "known_kernels",
     "known_archs", "suggest", "unknown_key_error", "unknown_key_message",
     "Prediction", "BatchPrediction", "PlacedBatchPrediction",
-    "SimulationResult", "GroupShare", "DomainShare", "dump_ndjson",
-    "iter_ndjson", "dump_dicts", "load_ndjson",
+    "SimulationResult", "Sensitivities", "GroupShare", "DomainShare",
+    "dump_ndjson", "iter_ndjson", "dump_dicts", "load_ndjson",
 ]

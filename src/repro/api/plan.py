@@ -59,8 +59,8 @@ from ..core.desync import Allreduce, Idle, Item, WaitNeighbors, Work
 from ..core.sharing import Group
 from ..core.table2 import KernelSpec
 from .results import (BatchPrediction, PlacedBatchPrediction, Prediction,
-                      SimulationResult, from_share_prediction,
-                      from_topology_prediction)
+                      Sensitivities, SimulationResult,
+                      from_share_prediction, from_topology_prediction)
 from .scenario import Scenario, ScenarioBatch
 
 # ---------------------------------------------------------------------------
@@ -188,6 +188,23 @@ class Plan:
         """Re-execute the plan; see the subclass for accepted swaps."""
         raise NotImplementedError
 
+    def grad(self, *, wrt=("f", "b_s"), softmin_beta=None):
+        """Run the plan *and* differentiate it: the returned prediction
+        carries a :class:`repro.api.results.Sensitivities` block with
+        exact jacobians ``∂bw/∂wrt`` through the Eq. 1–5 chain (see the
+        prediction-plan subclasses).  Simulation plans cannot be
+        differentiated — see :meth:`SimulatePlan.grad`."""
+        raise NotImplementedError(
+            f"plan kind {self.kind!r} does not support grad()")
+
+
+def _sensitivities_for(solver_options: Mapping, grads: dict,
+                       wrt, softmin_beta) -> Sensitivities:
+    return Sensitivities(
+        wrt=tuple(wrt), jacobians=grads,
+        utilization=solver_options.get("utilization", "recursion"),
+        softmin_beta=softmin_beta)
+
 
 def _swap_scalar(value, name: str, G: int):
     if value is None:
@@ -245,6 +262,23 @@ class ScalarPlan(Plan):
                                      provenance=self.provenance,
                                      engine="scalar")
 
+    def grad(self, *, wrt=("f", "b_s"), softmin_beta=None) -> Prediction:
+        """Solve and differentiate: jacobians ``∂bw_i/∂wrt_j`` of shape
+        ``(G, G)`` per requested input, attached as
+        ``prediction.sensitivities`` (forward values are the unchanged
+        scalar solve).  Requires jax; ``softmin_beta`` smooths the
+        saturation min on the gradient path only."""
+        n = np.array([[float(g.n) for g in self.groups]])
+        f = np.array([[g.f for g in self.groups]])
+        bs = np.array([[g.bs for g in self.groups]])
+        _, grads = sharing.solve_arrays_and_grad(
+            n, f, bs, wrt=wrt, softmin_beta=softmin_beta,
+            **self.solver_options)
+        sens = _sensitivities_for(
+            self.solver_options, {k: v[0] for k, v in grads.items()},
+            wrt, softmin_beta)
+        return dataclasses.replace(self.run(), sensitivities=sens)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class PlacedPlan(Plan):
@@ -280,6 +314,25 @@ class PlacedPlan(Plan):
         pred = topology_mod.predict_placed(self.topo, placements, **kwargs)
         return from_topology_prediction(pred, arch=self.arch,
                                         provenance=self.provenance)
+
+    def grad(self, *, wrt=("f", "b_s"), softmin_beta=None) -> Prediction:
+        """Solve and differentiate the placed scenario: jacobians of
+        shape ``(D, K, K)`` in grid coordinates (domain, occupancy
+        slot — the packing order of :func:`repro.core.topology.
+        pack_placed`), attached as ``prediction.sensitivities``.
+        Requires jax."""
+        grid = topology_mod.pack_placed(
+            self.topo, [self.placements],
+            strict=self.solver_kwargs.get("strict", True))
+        solver_options = {k: v for k, v in self.solver_kwargs.items()
+                          if k in ("utilization", "p0_factor", "saturated")}
+        _, grads = sharing.solve_placed_and_grad(
+            grid.n, grid.f, grid.bs, mask=grid.mask, wrt=wrt,
+            softmin_beta=softmin_beta, **solver_options)
+        sens = _sensitivities_for(
+            solver_options, {k: v[0] for k, v in grads.items()},
+            wrt, softmin_beta)
+        return dataclasses.replace(self.run(), sensitivities=sens)
 
 
 def _swap_array(base: np.ndarray, value, name: str) -> np.ndarray:
@@ -356,6 +409,20 @@ class BatchPlan(Plan):
             util=util, bw_group=bw, names=self.names)
         return BatchPrediction(archs=self.archs, engine=resolved, raw=raw,
                                provenance=self.provenance)
+
+    def grad(self, *, wrt=("f", "b_s"), softmin_beta=None
+             ) -> BatchPrediction:
+        """Solve and differentiate the whole batch: jacobians
+        ``∂bw[b, i]/∂wrt[b, j]`` of shape ``(B, G, G)`` per requested
+        input, attached as ``prediction.sensitivities``.  Runs on the
+        substrate's jit-bucket cache (requires jax); ``softmin_beta``
+        smooths the saturation min on the gradient path only."""
+        _, grads = sharing.solve_arrays_and_grad(
+            self.n, self.f, self.bs, wrt=wrt, softmin_beta=softmin_beta,
+            **self.solver_options)
+        sens = _sensitivities_for(self.solver_options, grads, wrt,
+                                  softmin_beta)
+        return dataclasses.replace(self.run(), sensitivities=sens)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -452,6 +519,20 @@ class PlacedBatchPlan(Plan):
         return PlacedBatchPrediction(archs=self.archs, engine=resolved,
                                      raw=raw, provenance=prov)
 
+    def grad(self, *, wrt=("f", "b_s"), softmin_beta=None
+             ) -> PlacedBatchPrediction:
+        """Solve and differentiate the placed batch: jacobians of shape
+        ``(B, D, K, K)`` in grid coordinates per requested input, with
+        masked (padding) lanes exactly zero, attached as
+        ``prediction.sensitivities``.  Requires jax."""
+        grid = self.grid
+        _, grads = sharing.solve_placed_and_grad(
+            grid.n, grid.f, grid.bs, mask=grid.mask, wrt=wrt,
+            softmin_beta=softmin_beta, **self.solver_options)
+        sens = _sensitivities_for(self.solver_options, grads, wrt,
+                                  softmin_beta)
+        return dataclasses.replace(self.run(), sensitivities=sens)
+
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class SimulatePlan(Plan):
@@ -526,6 +607,19 @@ class SimulatePlan(Plan):
         return SimulationResult(arch=self.arch,
                                 engine=f"desync-{resolved}", raw=res,
                                 members=self.members)
+
+    def grad(self, *, wrt=("f", "b_s"), softmin_beta=None):
+        """Simulations are not reverse-differentiable: the event loop
+        branches on data (the jax engine is a ``lax.while_loop``), so
+        no gradient flows through a full run.  Differentiate a
+        prediction plan instead, or use :func:`repro.core.desync_batch.
+        work_durations_and_grad` for the timing of one event step."""
+        raise NotImplementedError(
+            "simulate plans cannot be differentiated: the desync event "
+            "loop branches on data (lax.while_loop on the jax backend). "
+            "Use a predict plan's grad(), or "
+            "repro.core.desync_batch.work_durations_and_grad for "
+            "one event step's timing jacobians.")
 
 
 # ---------------------------------------------------------------------------

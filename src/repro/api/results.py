@@ -64,6 +64,61 @@ class DomainShare:
 
 
 @dataclasses.dataclass(frozen=True)
+class Sensitivities:
+    """Exact jacobians of a prediction's attained bandwidths.
+
+    ``jacobians[name]`` holds ``∂bw/∂name`` for each requested input
+    (``"f"``, ``"b_s"``, ``"cores"``) with the trailing two axes being
+    ``(output group, input group)``: a single scenario carries
+    ``(G, G)``, a batch ``(B, G, G)``, a placed solve ``(D, K, K)`` /
+    ``(B, D, K, K)`` in *grid* coordinates (domain, occupancy slot — the
+    same layout as :attr:`PlacedBatchPrediction.grid`).  Produced by
+    ``plan.grad(...)`` through :func:`repro.core.sharing.
+    solve_arrays_and_grad`; ``softmin_beta`` records whether the
+    saturation min was smoothed on the gradient path (None = exact
+    subgradient), ``utilization`` the law differentiated through.
+    """
+
+    wrt: tuple[str, ...]
+    jacobians: Mapping[str, np.ndarray]
+    utilization: str | float
+    softmin_beta: float | None
+    engine: str = "jax"
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        try:
+            return self.jacobians[name]
+        except KeyError:
+            from .registry import unknown_key_error
+            raise unknown_key_error("gradient input", name,
+                                    sorted(self.jacobians)) from None
+
+    def to_dict(self) -> dict:
+        return {
+            "schema": SCHEMA_VERSION,
+            "kind": "sensitivities",
+            "wrt": list(self.wrt),
+            "utilization": self.utilization,
+            "softmin_beta": self.softmin_beta,
+            "engine": self.engine,
+            "jacobians": {
+                name: {"shape": list(j.shape),
+                       "data": np.asarray(j).ravel().tolist()}
+                for name, j in self.jacobians.items()},
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Sensitivities":
+        jac = {
+            name: np.asarray(e["data"], dtype=np.float64).reshape(
+                e["shape"])
+            for name, e in d["jacobians"].items()}
+        return cls(wrt=tuple(d["wrt"]), jacobians=jac,
+                   utilization=d["utilization"],
+                   softmin_beta=d["softmin_beta"], engine=d["engine"])
+
+
+@dataclasses.dataclass(frozen=True)
 class Prediction:
     """One solved scenario, whichever engine solved it."""
 
@@ -71,6 +126,8 @@ class Prediction:
     engine: str            # "scalar" | "topology" | "numpy" | "jax"
     groups: tuple[GroupShare, ...]
     domains: tuple[DomainShare, ...]
+    #: Jacobians attached by ``plan.grad(...)``; None on plain solves.
+    sensitivities: Sensitivities | None = None
 
     # -- the classic SharePrediction surface --------------------------------
 
@@ -109,7 +166,7 @@ class Prediction:
     # -- export -------------------------------------------------------------
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "schema": SCHEMA_VERSION,
             "kind": "prediction",
             "arch": self.arch,
@@ -118,13 +175,19 @@ class Prediction:
             "domains": [dataclasses.asdict(d) for d in self.domains],
             "total_bw": self.total_bw,
         }
+        if self.sensitivities is not None:
+            d["sensitivities"] = self.sensitivities.to_dict()
+        return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "Prediction":
+        sens = d.get("sensitivities")
         return cls(
             arch=d["arch"], engine=d["engine"],
             groups=tuple(GroupShare(**g) for g in d["groups"]),
-            domains=tuple(DomainShare(**g) for g in d["domains"]))
+            domains=tuple(DomainShare(**g) for g in d["domains"]),
+            sensitivities=(Sensitivities.from_dict(sens)
+                           if sens is not None else None))
 
 
 def _group_shares(pred: SharePrediction, provenance: Sequence[str],
@@ -184,6 +247,9 @@ class BatchPrediction:
     engine: str            # "numpy" | "jax"
     raw: BatchSharePrediction
     provenance: tuple[tuple[str, ...], ...]  # (B, G), "" for padding
+    #: Jacobians attached by ``plan.grad(...)`` — ``(B, G, G)`` per
+    #: input; None on plain solves.
+    sensitivities: Sensitivities | None = None
 
     @property
     def arch(self) -> str:
@@ -265,6 +331,9 @@ class PlacedBatchPrediction:
     engine: str              # solver backend: "numpy" | "jax"
     raw: TopologyBatchPrediction
     provenance: tuple[tuple[str, ...], ...]  # (B, J) input-order labels
+    #: Jacobians attached by ``plan.grad(...)`` — ``(B, D, K, K)`` in
+    #: grid coordinates; None on plain solves.
+    sensitivities: Sensitivities | None = None
 
     @property
     def arch(self) -> str:

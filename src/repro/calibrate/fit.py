@@ -17,7 +17,14 @@ every candidate ``f`` the optimal ``b_s`` is closed-form (the model is
 linear in ``b_s``), so the residual profile over the grid is computed for
 **all (kernel, arch, seed) cells at once** — one vectorized numpy pass or
 one ``jax.vmap``-ped, jitted pass, no per-cell Python loop — followed by
-a parabolic sub-grid refinement of the winning ``f``.  Seed ensembles
+a sub-grid refinement of the winning ``f`` inside its bracket.  The
+refinement is jacobian-based Gauss–Newton over the identical vectorized
+residual (analytic ``∂U/∂f`` from
+:func:`repro.core.sharing.utilization_curve_grad` on numpy, ``jax.jvp``
+on jax): quadratic convergence instead of the retired golden section's
+fixed φ-rate bracket shrink, at a third of the residual evaluations,
+plus *free* curvature-based confidence intervals from the Gauss–Newton
+normal matrix (``ScalingFit.f_sigma`` / ``bs_sigma``).  Seed ensembles
 aggregate into medians with percentile confidence intervals
 (:func:`aggregate_ensemble`), and :func:`calibrated_specs` materializes
 the result as first-class :class:`repro.core.table2.KernelSpec` objects
@@ -29,13 +36,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Mapping, Sequence
 
 import numpy as np
 
 from ..core import backend as backend_mod
 from ..core.backend import HAVE_JAX
-from ..core.sharing import solve_batch, utilization_curve
+from ..core.sharing import (UTILIZATION_MODES, solve_batch,
+                            utilization_curve, utilization_curve_grad)
 from ..core.table2 import TABLE2, KernelSpec
 from .traces import PairTrace, ScalingTrace, TraceSet
 
@@ -54,7 +63,18 @@ def forward_bandwidth(n, f, bs, *, utilization: str = "queue",
 
 @dataclasses.dataclass(frozen=True)
 class ScalingFit:
-    """Per-cell ``(f, b_s)`` estimates for a batch of scaling traces."""
+    """Per-cell ``(f, b_s)`` estimates for a batch of scaling traces.
+
+    ``f_sigma`` / ``bs_sigma`` are per-cell curvature (1σ) uncertainties
+    from the Gauss–Newton normal matrix at the optimum — the local
+    sensitivity of the fit to measurement noise, complementary to the
+    cross-seed percentile CIs of :func:`aggregate_ensemble`.  A cell
+    whose curve never leaves saturation has ``f_sigma = inf`` (the knee
+    position is unidentifiable from a flat plateau).  ``n_evals`` counts
+    residual evaluations per cell (grid profile + refinement), the
+    quantity the Gauss–Newton migration reduced; ``refine`` records which
+    refiner produced the numbers.
+    """
 
     f: np.ndarray          # (C,) fitted request fractions
     bs: np.ndarray         # (C,) fitted saturated bandwidths [GB/s]
@@ -62,6 +82,10 @@ class ScalingFit:
     traces: tuple[ScalingTrace, ...]
     utilization: str
     backend: str
+    f_sigma: np.ndarray | None = None    # (C,) curvature 1σ of f
+    bs_sigma: np.ndarray | None = None   # (C,) curvature 1σ of b_s
+    refine: str = "gauss-newton"
+    n_evals: int = 0
 
     def __len__(self) -> int:
         return len(self.traces)
@@ -76,12 +100,20 @@ class ScalingFit:
 
 @dataclasses.dataclass(frozen=True)
 class CalibratedValue:
-    """Seed-ensemble estimate of one model input: median + percentile CI."""
+    """Seed-ensemble estimate of one model input: median + percentile CI.
+
+    ``sigma`` is the median per-seed *curvature* uncertainty (1σ, from
+    the Gauss–Newton normal matrix) — how sharply the residual pins the
+    value within one trace, vs. the ``lo``/``hi`` percentile band which
+    measures spread *across* seeds.  0.0 when the fit carried no
+    curvature information (a :class:`ScalingFit` constructed without
+    sigmas)."""
 
     value: float
     lo: float
     hi: float
     n_seeds: int
+    sigma: float = 0.0
 
     @property
     def spread(self) -> float:
@@ -116,6 +148,22 @@ def _profile_rss_np(n, y, mask, f_grid, utilization, p0_factor):
 
 _INVPHI = (np.sqrt(5.0) - 1.0) / 2.0
 _REFINE_ITERS = 32  # bracket shrinks by φ⁻¹ per iter: ~1e-6 of a grid step
+_GN_ITERS = 12      # Gauss–Newton is quadratic near the optimum; 12
+                    # trust-clipped steps inside the grid bracket land at
+                    # machine precision with a third of golden's evals
+
+#: The supported sub-grid refiners.  "golden" is a deprecated escape
+#: hatch kept so the Gauss–Newton re-baseline is reversible.
+REFINE_METHODS = ("gauss-newton", "golden")
+
+
+def _refine_evals(refine: str, n_grid: int) -> int:
+    """Residual evaluations per cell: the grid profile plus what the
+    refiner spends (jacobian evaluations count as one residual pass —
+    the derivative rides along analytically)."""
+    if refine == "golden":
+        return n_grid + 2 + 2 * _REFINE_ITERS + 1
+    return n_grid + 2 * _GN_ITERS + 1
 
 
 def _rss_at_np(n, y, mask, f, utilization, p0_factor):
@@ -130,14 +178,10 @@ def _rss_at_np(n, y, mask, f, utilization, p0_factor):
     return rss, bs
 
 
-def _fit_cells_np(n, y, mask, f_grid, utilization, p0_factor):
-    rss, _ = _profile_rss_np(n, y, mask, f_grid, utilization, p0_factor)
-    j = rss.argmin(axis=-1)
-    F = len(f_grid)
-    # Golden-section refinement inside the winning grid bracket
-    # [f_{j-1}, f_{j+1}] — vectorized over cells, fixed iteration count.
-    a = f_grid[np.clip(j - 1, 0, F - 1)]
-    b = f_grid[np.clip(j + 1, 0, F - 1)]
+def _refine_golden_np(n, y, mask, a, b, utilization, p0_factor):
+    """Golden-section refinement inside the winning grid bracket
+    ``[a, b]`` — vectorized over cells, fixed iteration count.
+    Deprecated: the default refiner is :func:`_refine_gn_np`."""
     c = b - _INVPHI * (b - a)
     d = a + _INVPHI * (b - a)
     rc, _ = _rss_at_np(n, y, mask, c, utilization, p0_factor)
@@ -150,10 +194,102 @@ def _fit_cells_np(n, y, mask, f_grid, utilization, p0_factor):
         d = a + _INVPHI * (b - a)
         rc, _ = _rss_at_np(n, y, mask, c, utilization, p0_factor)
         rd, _ = _rss_at_np(n, y, mask, d, utilization, p0_factor)
-    f_hat = 0.5 * (a + b)
+    return 0.5 * (a + b)
+
+
+def _gn_terms_np(n, y, mask, f, utilization, p0_factor):
+    """One Gauss–Newton linearization of the *profiled* residual
+    ``r(f) = y − b_s*(f)·u(f)`` at ``f`` (``(C,)``), with ``b_s*``'s own
+    ``f``-dependence carried through (variable projection).  Returns
+    ``(step, rss, bs)`` where ``step`` solves the 1-d normal equation
+    ``(Σ (dm)²)·δ = Σ dm·r`` for the model derivative ``dm = ∂(b_s*·u)/∂f``.
+    """
+    u, du = utilization_curve_grad(n, f[:, None], mode=utilization,
+                                   p0_factor=p0_factor)
+    u = np.where(mask, u, 0.0)
+    du = np.where(mask, du, 0.0)
+    ym = np.where(mask, y, 0.0)
+    su2 = (u * u).sum(axis=-1)
+    syu = (ym * u).sum(axis=-1)
+    bs = syu / np.maximum(su2, _EPS)
+    dbs = ((ym * du).sum(axis=-1) * su2
+           - syu * 2.0 * (u * du).sum(axis=-1)) \
+        / np.maximum(su2 * su2, _EPS)
+    dm = dbs[:, None] * u + bs[:, None] * du
+    r = ym - bs[:, None] * u
+    rss = (r * r).sum(axis=-1)
+    step = (dm * r).sum(axis=-1) / np.maximum((dm * dm).sum(axis=-1),
+                                              _EPS)
+    return step, rss, bs
+
+
+def _refine_gn_np(n, y, mask, f0, a, b, utilization, p0_factor):
+    """Trust-clipped Gauss–Newton on the profiled residual, seeded at the
+    grid argmin and confined to its bracket ``[a, b]`` (the same bracket
+    golden section searched, so the two refiners converge to the same
+    local optimum).  A step that fails to reduce the RSS is rejected and
+    the trust radius quartered — the deterministic safeguard both the
+    numpy and jax implementations share, so backends agree."""
+    f = f0.copy()
+    rss, _ = _rss_at_np(n, y, mask, f, utilization, p0_factor)
+    trust = b - a
+    for _ in range(_GN_ITERS):
+        step, _, _ = _gn_terms_np(n, y, mask, f, utilization, p0_factor)
+        cand = np.clip(f + np.clip(step, -trust, trust), a, b)
+        rss_c, _ = _rss_at_np(n, y, mask, cand, utilization, p0_factor)
+        ok = rss_c <= rss
+        f = np.where(ok, cand, f)
+        rss = np.where(ok, rss_c, rss)
+        trust = np.where(ok, trust, 0.25 * trust)
+    return f
+
+
+def _curvature_np(n, y, mask, f, bs, rss, utilization, p0_factor):
+    """Curvature (1σ) uncertainties from the two-parameter Gauss–Newton
+    normal matrix at the optimum: ``J = [b_s·∂U/∂f, U]`` per sample,
+    ``cov = σ²·(JᵀJ)⁻¹`` with ``σ² = rss/(m−2)``.  A flat (all-saturated)
+    curve has no ``f`` information → ``f_sigma = inf`` and ``b_s``
+    falls back to its one-parameter variance."""
+    u, du = utilization_curve_grad(n, f[:, None], mode=utilization,
+                                   p0_factor=p0_factor)
+    u = np.where(mask, u, 0.0)
+    du = np.where(mask, du, 0.0)
+    j1 = bs[:, None] * du
+    a11 = (j1 * j1).sum(axis=-1)
+    a12 = (j1 * u).sum(axis=-1)
+    a22 = (u * u).sum(axis=-1)
+    det = a11 * a22 - a12 * a12
+    m_eff = mask.sum(axis=-1)
+    s2 = rss / np.maximum(m_eff - 2, 1)
+    ok = det > 1e-12 * np.maximum(a11 * a22, _EPS)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        f_sigma = np.where(ok, np.sqrt(np.maximum(s2 * a22, 0.0)
+                                       / np.where(ok, det, 1.0)),
+                           np.inf)
+        bs_sigma = np.where(
+            ok, np.sqrt(np.maximum(s2 * a11, 0.0) / np.where(ok, det, 1.0)),
+            np.sqrt(s2 / np.maximum(a22, _EPS)))
+    return f_sigma, bs_sigma
+
+
+def _fit_cells_np(n, y, mask, f_grid, utilization, p0_factor,
+                  refine="gauss-newton"):
+    rss, _ = _profile_rss_np(n, y, mask, f_grid, utilization, p0_factor)
+    j = rss.argmin(axis=-1)
+    F = len(f_grid)
+    a = f_grid[np.clip(j - 1, 0, F - 1)]
+    b = f_grid[np.clip(j + 1, 0, F - 1)]
+    if refine == "golden":
+        f_hat = _refine_golden_np(n, y, mask, a, b, utilization,
+                                  p0_factor)
+    else:
+        f_hat = _refine_gn_np(n, y, mask, f_grid[j], a, b, utilization,
+                              p0_factor)
     rss_hat, bs_hat = _rss_at_np(n, y, mask, f_hat, utilization,
                                  p0_factor)
-    return f_hat, bs_hat, rss_hat
+    f_sigma, bs_sigma = _curvature_np(n, y, mask, f_hat, bs_hat, rss_hat,
+                                      utilization, p0_factor)
+    return f_hat, bs_hat, rss_hat, f_sigma, bs_sigma
 
 
 if HAVE_JAX:
@@ -163,10 +299,12 @@ if HAVE_JAX:
 
     from ..core.sharing import utilization_curve_jax
 
-    def _fit_single_jax(n, y, mask, f_grid, p0_factor, n_max, *, mode):
-        """One cell: profile RSS over the f grid + golden-section
-        refinement.  Shapes: ``n, y, mask`` are ``(N,)``; vmapped over
-        the cell axis."""
+    def _fit_single_jax(n, y, mask, f_grid, p0_factor, n_max, *, mode,
+                        refine="gauss-newton"):
+        """One cell: profile RSS over the f grid + sub-grid refinement
+        (trust-clipped Gauss–Newton by default; the deprecated golden
+        section behind ``refine="golden"``).  Shapes: ``n, y, mask`` are
+        ``(N,)``; vmapped over the cell axis."""
         ym = jnp.where(mask, y, 0.0)
 
         def rss_at(f):
@@ -176,6 +314,16 @@ if HAVE_JAX:
             bs = (ym * u).sum() / jnp.maximum((u * u).sum(), _EPS)
             rss = ((jnp.where(mask, ym - bs * u, 0.0)) ** 2).sum()
             return rss, bs
+
+        def u_du(f):
+            """``(U, ∂U/∂f)`` at scalar ``f`` — forward mode for the
+            explicit laws, reverse mode for the fixed point (its
+            ``custom_vjp`` has no jvp rule, by design)."""
+            curve = functools.partial(utilization_curve_jax, n, mode=mode,
+                                      p0_factor=p0_factor, n_max=n_max)
+            if mode == "fixedpoint":
+                return curve(f), jax.jacrev(curve)(f)
+            return jax.jvp(curve, (f,), (jnp.ones_like(f),))
 
         u = utilization_curve_jax(n[None, :], f_grid[:, None], mode=mode,
                                   p0_factor=p0_factor, n_max=n_max)  # (F, N)
@@ -190,34 +338,87 @@ if HAVE_JAX:
         a = f_grid[jnp.clip(j - 1, 0, F - 1)]
         b = f_grid[jnp.clip(j + 1, 0, F - 1)]
 
-        def body(_, state):
-            a, b, c, d, rc, rd = state
-            left = rc < rd
-            a = jnp.where(left, a, c)
-            b = jnp.where(left, d, b)
+        if refine == "golden":
+            def body(_, state):
+                a, b, c, d, rc, rd = state
+                left = rc < rd
+                a = jnp.where(left, a, c)
+                b = jnp.where(left, d, b)
+                c = b - _INVPHI * (b - a)
+                d = a + _INVPHI * (b - a)
+                rc = rss_at(c)[0]
+                rd = rss_at(d)[0]
+                return a, b, c, d, rc, rd
+
             c = b - _INVPHI * (b - a)
             d = a + _INVPHI * (b - a)
-            rc = rss_at(c)[0]
-            rd = rss_at(d)[0]
-            return a, b, c, d, rc, rd
+            state = (a, b, c, d, rss_at(c)[0], rss_at(d)[0])
+            a2, b2, *_ = lax.fori_loop(0, _REFINE_ITERS, body, state)
+            f_hat = 0.5 * (a2 + b2)
+        else:
+            # Trust-clipped Gauss–Newton on the profiled residual:
+            # identical algorithm (and accept/reject rule) to
+            # _refine_gn_np, so the backends agree.
+            def gn_body(_, state):
+                f, rss_f, trust = state
+                uf, duf = u_du(f)
+                uf = jnp.where(mask, uf, 0.0)
+                duf = jnp.where(mask, duf, 0.0)
+                su2 = (uf * uf).sum()
+                syu = (ym * uf).sum()
+                bs = syu / jnp.maximum(su2, _EPS)
+                dbs = ((ym * duf).sum() * su2
+                       - syu * 2.0 * (uf * duf).sum()) \
+                    / jnp.maximum(su2 * su2, _EPS)
+                dm = dbs * uf + bs * duf
+                r = ym - bs * uf
+                step = (dm * r).sum() / jnp.maximum((dm * dm).sum(),
+                                                    _EPS)
+                cand = jnp.clip(f + jnp.clip(step, -trust, trust), a, b)
+                rss_c = rss_at(cand)[0]
+                ok = rss_c <= rss_f
+                return (jnp.where(ok, cand, f),
+                        jnp.where(ok, rss_c, rss_f),
+                        jnp.where(ok, trust, 0.25 * trust))
 
-        c = b - _INVPHI * (b - a)
-        d = a + _INVPHI * (b - a)
-        state = (a, b, c, d, rss_at(c)[0], rss_at(d)[0])
-        a, b, *_ = lax.fori_loop(0, _REFINE_ITERS, body, state)
-        f_hat = 0.5 * (a + b)
+            f0 = f_grid[j]
+            state = (f0, rss_at(f0)[0], b - a)
+            f_hat, *_ = lax.fori_loop(0, _GN_ITERS, gn_body, state)
+
         rss_hat, bs_hat = rss_at(f_hat)
-        return f_hat, bs_hat, rss_hat
 
-    def _build_jax_fit(mode: str, n_max: int):
+        # Curvature (1σ) from the 2-parameter normal matrix at the
+        # optimum — same formulas as _curvature_np.
+        uf, duf = u_du(f_hat)
+        uf = jnp.where(mask, uf, 0.0)
+        duf = jnp.where(mask, duf, 0.0)
+        j1 = bs_hat * duf
+        a11 = (j1 * j1).sum()
+        a12 = (j1 * uf).sum()
+        a22 = (uf * uf).sum()
+        det = a11 * a22 - a12 * a12
+        m_eff = mask.sum()
+        s2 = rss_hat / jnp.maximum(m_eff - 2, 1)
+        okc = det > 1e-12 * jnp.maximum(a11 * a22, _EPS)
+        safe_det = jnp.where(okc, det, 1.0)
+        f_sigma = jnp.where(
+            okc, jnp.sqrt(jnp.maximum(s2 * a22, 0.0) / safe_det), jnp.inf)
+        bs_sigma = jnp.where(
+            okc, jnp.sqrt(jnp.maximum(s2 * a11, 0.0) / safe_det),
+            jnp.sqrt(s2 / jnp.maximum(a22, _EPS)))
+        return f_hat, bs_hat, rss_hat, f_sigma, bs_sigma
+
+    def _build_jax_fit(mode: str, n_max: int, refine: str):
         """Jitted vmap of the per-cell fit for one shape bucket;
         registered in the substrate's process-wide solver cache."""
         vmapped = jax.vmap(
-            functools.partial(_fit_single_jax, mode=mode, n_max=n_max),
+            functools.partial(_fit_single_jax, mode=mode, n_max=n_max,
+                              refine=refine),
             in_axes=(0, 0, 0, None, None))
         return jax.jit(vmapped)
 
-    def _fit_cells_jax(n, y, mask, f_grid, utilization, p0_factor):
+    def _fit_cells_jax(n, y, mask, f_grid, utilization, p0_factor,
+                       refine="gauss-newton"):
         C, N = n.shape
         # Only the recursion law compiles an n-dependent loop; the queue
         # law shares one executable per (C, N, F) bucket.
@@ -226,9 +427,9 @@ if HAVE_JAX:
         n_max_b = backend_mod.bucket(n_max) if n_max else 0
         Cb = backend_mod.bucket(C)
         fitter = backend_mod.jitted(
-            ("calibrate.fit_scaling", utilization, Cb, N, len(f_grid),
-             n_max_b),
-            lambda: _build_jax_fit(utilization, n_max_b))
+            ("calibrate.fit_scaling", utilization, refine, Cb, N,
+             len(f_grid), n_max_b),
+            lambda: _build_jax_fit(utilization, n_max_b, refine))
         with jax.experimental.enable_x64():
             # Padded cells are all-masked: their fit runs on zeros and
             # is sliced off below, so real cells are bit-for-bit the
@@ -248,41 +449,71 @@ if HAVE_JAX:
 def fit_scaling(traces: TraceSet | Sequence[ScalingTrace], *,
                 utilization: str = "queue",
                 f_grid: np.ndarray | None = None, p0_factor: float = 0.5,
-                backend: str = "auto",
-                jax_cutoff: int | None = None) -> ScalingFit:
+                backend: str = "auto", jax_cutoff: int | None = None,
+                refine: str = "gauss-newton") -> ScalingFit:
     """Fit ``(f, b_s)`` for every scaling trace in one batched pass.
 
     ``utilization`` must match the instrument that produced the traces:
     ``"queue"`` for memsim-generated curves (and idealized interfaces),
-    ``"recursion"`` for real-hardware measurements with a soft knee.
+    ``"recursion"`` (or its ``"fixedpoint"`` self-consistent limit) for
+    real-hardware measurements with a soft knee.
     ``backend``: ``"numpy"``, ``"jax"`` (vmapped + jitted), or ``"auto"``
     — resolved by the substrate (:func:`repro.core.backend.resolve`)
     against the number of cells, honoring ``REPRO_JAX_CUTOFF`` / the
     ``jax_cutoff`` override like every batched path.  The jitted fit
-    kernel — grid profile plus the golden-section refinement — is one
-    compiled plan per (cell-bucket, law) in the substrate's cache, so
-    repeated fits of same-shaped trace sets skip recompilation.
+    kernel — grid profile plus the sub-grid refinement — is one
+    compiled plan per (cell-bucket, law, refiner) in the substrate's
+    cache, so repeated fits of same-shaped trace sets skip
+    recompilation.
+
+    ``refine`` selects the sub-grid refiner inside the winning grid
+    bracket:
+
+    * ``"gauss-newton"`` (default) — jacobian-based Gauss–Newton over the
+      identical profiled residual, with analytic ``∂U/∂f``
+      (:func:`repro.core.sharing.utilization_curve_grad` / ``jax.jvp``).
+      Quadratic convergence, ~1/3 the residual evaluations of golden
+      section, and curvature-based ``f_sigma``/``bs_sigma`` CIs for free.
+    * ``"golden"`` — **deprecated** escape hatch: the pre-jacobian
+      golden-section bracket shrink, kept one release so the re-baseline
+      is reversible (docs/known-issues.md).  Emits a
+      ``DeprecationWarning``; both refiners converge to the same bracket
+      optimum within ~1e-9 relative.
     """
     if not isinstance(traces, TraceSet):
         traces = TraceSet(scaling=tuple(traces))
+    if refine not in REFINE_METHODS:
+        raise ValueError(
+            f"unknown refine method {refine!r} (choose from "
+            f"{REFINE_METHODS})")
+    if refine == "golden":
+        warnings.warn(
+            "refine='golden' is deprecated: the golden-section refiner "
+            "is retired in favor of jacobian-based Gauss-Newton (same "
+            "optimum, fewer residual evaluations, curvature CIs); this "
+            "escape hatch will be removed once the re-baseline has "
+            "soaked", DeprecationWarning, stacklevel=2)
     if not traces.scaling:
         return ScalingFit(f=np.zeros(0), bs=np.zeros(0), rss=np.zeros(0),
                           traces=(), utilization=utilization,
-                          backend=backend)
-    if utilization not in ("queue", "recursion"):
+                          backend=backend, f_sigma=np.zeros(0),
+                          bs_sigma=np.zeros(0), refine=refine)
+    if utilization not in UTILIZATION_MODES:
         raise ValueError(f"unknown utilization mode {utilization!r}")
     f_grid = DEFAULT_F_GRID if f_grid is None else np.asarray(f_grid)
     n, y, mask, tr = traces.to_arrays()
     backend = backend_mod.resolve(backend, n.shape[0],
                                   jax_cutoff=jax_cutoff)
     if backend == "jax":
-        f_hat, bs_hat, rss = _fit_cells_jax(n, y, mask, f_grid,
-                                            utilization, p0_factor)
+        f_hat, bs_hat, rss, f_sig, bs_sig = _fit_cells_jax(
+            n, y, mask, f_grid, utilization, p0_factor, refine)
     else:
-        f_hat, bs_hat, rss = _fit_cells_np(n, y, mask, f_grid,
-                                           utilization, p0_factor)
+        f_hat, bs_hat, rss, f_sig, bs_sig = _fit_cells_np(
+            n, y, mask, f_grid, utilization, p0_factor, refine)
     return ScalingFit(f=f_hat, bs=bs_hat, rss=rss, traces=tuple(tr),
-                      utilization=utilization, backend=backend)
+                      utilization=utilization, backend=backend,
+                      f_sigma=f_sig, bs_sigma=bs_sig, refine=refine,
+                      n_evals=_refine_evals(refine, len(f_grid)))
 
 
 def fit_scaling_cell(trace: ScalingTrace, **kwargs) -> tuple[float, float]:
@@ -307,18 +538,24 @@ def aggregate_ensemble(fit: ScalingFit, *, ci: float = 0.9
     "bs": CalibratedValue}}`` with the median as the point estimate and
     the central ``ci`` percentile interval over seeds as the confidence
     band (degenerate — lo == hi == value — for single-seed cells).
+    The per-seed curvature sigmas (when the fit carries them) aggregate
+    as their median into :attr:`CalibratedValue.sigma` — the
+    within-trace counterpart of the across-seed percentile band.
     """
     lo_q, hi_q = 50 * (1 - ci), 50 * (1 + ci)
     out: dict[tuple[str, str], dict[str, CalibratedValue]] = {}
     for key, idx in fit.cells().items():
         cell: dict[str, CalibratedValue] = {}
-        for field, arr in (("f", fit.f), ("bs", fit.bs)):
+        for field, arr, sig in (("f", fit.f, fit.f_sigma),
+                                ("bs", fit.bs, fit.bs_sigma)):
             vals = arr[idx]
             cell[field] = CalibratedValue(
                 value=float(np.median(vals)),
                 lo=float(np.percentile(vals, lo_q)),
                 hi=float(np.percentile(vals, hi_q)),
-                n_seeds=len(idx))
+                n_seeds=len(idx),
+                sigma=float(np.median(sig[idx])) if sig is not None
+                else 0.0)
         out[key] = cell
     return out
 

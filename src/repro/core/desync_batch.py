@@ -728,3 +728,76 @@ def _run_jax(enc: _Encoded, arch: str, specs, placement, t_max: float,
         records=_records_from_arrays(enc, start_a, end_a),
         start=start_a, end=end_a, t_end=t, n_steps=int(steps),
         backend="jax", failed=dead)
+
+
+# --------------------------------------------------------------------------
+# Differentiable timing twin
+# --------------------------------------------------------------------------
+
+# The event engines advance state with data-dependent control flow (the
+# numpy loop branches per step; the jax path is a ``lax.while_loop``,
+# which is not reverse-differentiable), so gradients cannot flow through
+# a full simulation.  But each *event step's* timing is pure arithmetic
+# on the Eq. 4–5 solve: a rank of group g progresses at
+# ``bw_g / n_g * 1e9`` bytes/s (see ``rates_of`` above), so co-running
+# groups with no intervening retirement finish their work items after
+#
+#     t_g = bytes_g * n_g / (bw_g * 1e9)  seconds.
+#
+# The helpers below expose that step-timing map — and its exact jacobian
+# through the share solve via :func:`repro.core.sharing.
+# solve_arrays_and_grad` — for gradient-based co-design on top of the
+# engine's own arithmetic.
+
+
+def work_durations(n, f, bs, bytes_, **solver_kwargs) -> np.ndarray:
+    """Per-rank seconds for each group to stream ``bytes_`` while all
+    groups co-run — one event step of the desync engine, vectorized over
+    scenarios.  All arguments broadcast to ``(B, G)``; ``solver_kwargs``
+    forward to :func:`repro.core.sharing.solve_arrays` (engine defaults:
+    ``utilization="recursion"``, ``p0_factor=0.5``)."""
+    from .sharing import solve_arrays
+    n, f, bs, bytes_ = np.broadcast_arrays(
+        *(np.asarray(a, dtype=np.float64)
+          for a in (n, f, bs, bytes_)))
+    _, _, _, bw = solve_arrays(n, f, bs, **solver_kwargs)
+    active = (n > 0) & (bytes_ > 0)
+    return np.where(active,
+                    bytes_ * n / (np.maximum(bw, _DUR_TINY) * 1e9), 0.0)
+
+
+_DUR_TINY = 1e-300
+
+
+def work_durations_and_grad(n, f, bs, bytes_, *, wrt=("f", "b_s"),
+                            **grad_kwargs
+                            ) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+    """:func:`work_durations` plus exact jacobians of every duration in
+    the requested solver inputs.
+
+    Chains ``d t_i / d θ_j = -bytes_i * n_i / (bw_i**2 * 1e9) *
+    d bw_i / d θ_j`` through :func:`repro.core.sharing.
+    solve_arrays_and_grad` (implicit-function-theorem vjp for the
+    fixed-point law, forward-mode elsewhere).  Returns ``(t, grads)``
+    with ``t`` of shape ``(B, G)`` and ``grads[name][b, i, j] =
+    ∂t[b, i]/∂name[b, j]``; ``grad_kwargs`` forward to the solver
+    (``utilization=``, ``softmin_beta=``, ...).  Requires jax."""
+    from .sharing import solve_arrays_and_grad
+    n, f, bs, bytes_ = np.broadcast_arrays(
+        *(np.asarray(a, dtype=np.float64)
+          for a in (n, f, bs, bytes_)))
+    (_, _, _, bw), bw_grads = solve_arrays_and_grad(
+        n, f, bs, wrt=wrt, **grad_kwargs)
+    active = (n > 0) & (bytes_ > 0)
+    safe_bw = np.where(active, np.maximum(bw, _DUR_TINY), 1.0)
+    t = np.where(active, bytes_ * n / (safe_bw * 1e9), 0.0)
+    scale = np.where(active, -bytes_ * n / (safe_bw ** 2 * 1e9), 0.0)
+    grads = {name: scale[:, :, None] * g for name, g in bw_grads.items()}
+    if "cores" in grads:
+        # t depends on n both through the share solve (chained above) and
+        # explicitly in the numerator — the per-rank slice of the group's
+        # work shrinks as agents are added.
+        direct = np.where(active, bytes_ / (safe_bw * 1e9), 0.0)
+        B, G = t.shape
+        grads["cores"] = grads["cores"] + direct[:, :, None] * np.eye(G)
+    return t, grads

@@ -173,21 +173,50 @@ def runtime(groups: Sequence[Group], work_bytes: Sequence[float]
 
 _TINY = 1e-300  # division guard far below any physical n·f product
 
+#: The named sub-saturation utilization laws (floats and ``saturated=True``
+#: are accepted separately by the solvers).
+UTILIZATION_MODES = ("queue", "recursion", "fixedpoint")
+
+#: Bisection depth of the fixed-point utilization solve: 60 halvings of
+#: [0, 1] put the bracket below float64 resolution, so the numpy and jax
+#: forward passes agree bitwise.
+_FP_BISECT_ITERS = 60
+
+
+def _fixedpoint_u_np(n, f, p0_factor):
+    """Self-consistent utilization ``u = min(1, n·f / (1 + p0·f·u·(n−1)))``
+    by bisection on the monotone residual ``r(u) = u − S(u)``."""
+    c = p0_factor * f * np.maximum(n - 1.0, 0.0)
+    lo = np.zeros_like(c)
+    hi = np.ones_like(c)
+    for _ in range(_FP_BISECT_ITERS):
+        mid = 0.5 * (lo + hi)
+        r = mid - np.minimum(1.0, n * f / (1.0 + c * mid))
+        below = r < 0
+        lo = np.where(below, mid, lo)
+        hi = np.where(below, hi, mid)
+    return 0.5 * (lo + hi)
+
 
 def utilization_curve(n, f, *, mode: str = "recursion",
                       p0_factor: float = 0.5) -> np.ndarray:
     """Sub-saturation interface utilization ``U(n; f)``, vectorized.
 
     ``n`` and ``f`` broadcast against each other; entries with ``n == 0``
-    (or ``f == 0`` in recursion mode) return 1.0, matching the neutral
-    handling inside :func:`_solve_arrays_np`.  Modes:
+    (or ``f == 0`` in recursion/fixedpoint mode) return 1.0, matching the
+    neutral handling inside :func:`_solve_arrays_np`.  Modes:
 
     * ``"queue"`` — ideal work-conserving interface, ``U = min(1, f·n)``
       (the hard knee of the queue instrument, core/memsim.py);
     * ``"recursion"`` — the simplified latency-penalty recursion of
       Hofmann et al. with ``t_ecm = 1``, ``t_mem = f`` and penalty
       ``p0 = p0_factor · f`` (the soft knee of real hardware, paper
-      Fig. 7; equivalent to :func:`repro.core.ecm.scaling_curve`).
+      Fig. 7; equivalent to :func:`repro.core.ecm.scaling_curve`);
+    * ``"fixedpoint"`` — the recursion law's self-consistent limit,
+      ``u = min(1, n·f / (1 + p0·f·u·(n−1)))``, solved as a fixed point.
+      Same soft knee, but the jax path registers a ``custom_vjp`` via the
+      implicit function theorem, so backprop costs one elementwise linear
+      solve instead of unrolling iterations (docs/model.md).
 
     This is the single implementation of the utilization law: the batched
     solver evaluates it at each scenario's ``(n_tot, f̄)``, and the
@@ -209,7 +238,65 @@ def utilization_curve(n, f, *, mode: str = "recursion",
             t_i = 1.0 + p0 * u * (i - 1)
             u = np.where(i <= n, np.minimum(1.0, i * f / t_i), u)
         return np.where(active & (f > 0), u, 1.0)
-    raise ValueError(f"unknown utilization mode {mode!r}")
+    if mode == "fixedpoint":
+        u = _fixedpoint_u_np(n, f, p0_factor)
+        return np.where(active & (f > 0), u, 1.0)
+    from ..api.registry import unknown_key_error
+    raise unknown_key_error("utilization mode", mode,
+                            list(UTILIZATION_MODES))
+
+
+def utilization_curve_grad(n, f, *, mode: str = "recursion",
+                           p0_factor: float = 0.5
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """``(U(n; f), ∂U/∂f)`` for every utilization law, vectorized numpy.
+
+    The derivative is carried analytically through the law itself —
+    forward-mode through the recursion sweep, the implicit function
+    theorem for the fixed point — so the calibration fit's Gauss–Newton
+    refinement (repro.calibrate.fit) gets exact jacobians on the numpy
+    backend, matching ``jax.jvp`` over :func:`utilization_curve_jax` on
+    the jax backend.  Neutral entries (``n == 0`` / ``f == 0``) return
+    ``(1, 0)``; saturated entries have exactly zero derivative (the min
+    clamps).
+    """
+    n, f = np.broadcast_arrays(np.asarray(n, dtype=np.float64),
+                               np.asarray(f, dtype=np.float64))
+    active = n > 0
+    if mode == "queue":
+        u = np.where(active, np.minimum(1.0, f * n), 1.0)
+        du = np.where(active & (f * n < 1.0), n, 0.0)
+        return u, du
+    if mode == "recursion":
+        p0 = p0_factor * f
+        u = f.copy()
+        du = np.ones_like(f)
+        n_max = int(n.max()) if n.size else 0
+        for i in range(2, n_max + 1):
+            t_i = 1.0 + p0 * u * (i - 1)
+            dt_i = (p0_factor * u + p0 * du) * (i - 1)
+            val = i * f / t_i
+            dval = i / t_i - i * f * dt_i / (t_i * t_i)
+            upd = i <= n
+            u = np.where(upd, np.minimum(1.0, val), u)
+            du = np.where(upd, np.where(val < 1.0, dval, 0.0), du)
+        live = active & (f > 0)
+        return np.where(live, u, 1.0), np.where(live, du, 0.0)
+    if mode == "fixedpoint":
+        u = _fixedpoint_u_np(n, f, p0_factor)
+        # IFT on h(u, f) = u + p0·f·(n−1)·u² − n·f = 0 (unsaturated):
+        # du/df = (n − p0·(n−1)·u²) / (1 + 2·p0·f·(n−1)·u).
+        c = p0_factor * f * np.maximum(n - 1.0, 0.0)
+        saturated = n * f >= 1.0 + c
+        du = np.where(
+            saturated, 0.0,
+            (n - p0_factor * np.maximum(n - 1.0, 0.0) * u * u)
+            / (1.0 + 2.0 * c * u))
+        live = active & (f > 0)
+        return np.where(live, u, 1.0), np.where(live, du, 0.0)
+    from ..api.registry import unknown_key_error
+    raise unknown_key_error("utilization mode", mode,
+                            list(UTILIZATION_MODES))
 
 
 def _solve_arrays_np(n: np.ndarray, f: np.ndarray, bs: np.ndarray, *,
@@ -245,7 +332,7 @@ def _solve_arrays_np(n: np.ndarray, f: np.ndarray, bs: np.ndarray, *,
         util = np.ones_like(b)
     elif isinstance(utilization, (int, float)):
         util = np.where(active, float(utilization), 1.0)
-    elif utilization in ("queue", "recursion"):
+    elif utilization in UTILIZATION_MODES:
         util = utilization_curve(n_tot, f_mean, mode=utilization,
                                  p0_factor=p0_factor)
     else:
@@ -257,34 +344,118 @@ def _solve_arrays_np(n: np.ndarray, f: np.ndarray, bs: np.ndarray, *,
 
 if HAVE_JAX:
 
-    def utilization_curve_jax(n, f, *, mode: str, p0_factor, n_max: int):
+    def _softmin_jax(a, b, beta):
+        """Smooth minimum ``−(1/β)·log(e^{−βa} + e^{−βb})``: a lower bound
+        on ``min(a, b)`` approaching it as β → ∞, with everywhere-defined
+        gradients (the saturation knee stops being a kink).  Stable via
+        ``logaddexp``."""
+        return -jnp.logaddexp(-beta * a, -beta * b) / beta
+
+    def _min_fn(beta):
+        """The saturation min of the gradient path: exact ``jnp.minimum``
+        when ``beta`` is None (a.e.-correct subgradients, the default),
+        the β-softmin otherwise."""
+        if beta is None:
+            return jnp.minimum
+        return functools.partial(_softmin_jax, beta=beta)
+
+    @functools.lru_cache(maxsize=None)
+    def _fixedpoint_u_jax(beta):
+        """The ``"fixedpoint"`` utilization law with a ``custom_vjp``.
+
+        Forward: bisection on ``r(u) = u − S(u)`` with
+        ``S(u) = min(1, n·f / (1 + p0·f·u·(n−1)))`` — ``r`` is strictly
+        increasing (S is decreasing in u), so the root is unique and 60
+        halvings of [0, 1] pin it to float64 resolution, matching
+        :func:`_fixedpoint_u_np` bitwise.
+
+        Backward: the implicit function theorem on the converged solution
+        instead of unrolling the bisection.  With ``u* = S(u*)``,
+        ``du* = ∂S/∂θ · dθ / (1 − ∂S/∂u)`` — and since ``∂S/∂u ≤ 0`` the
+        denominator is ≥ 1, so the "linear solve" is one well-conditioned
+        elementwise division.
+        """
+        smin = _min_fn(beta)
+
+        def S(u, n, f, p0):
+            c = p0 * f * jnp.maximum(n - 1.0, 0.0)
+            return smin(1.0, n * f / (1.0 + c * u))
+
+        @jax.custom_vjp
+        def fixed_u(n, f, p0):
+            def body(_, lohi):
+                lo, hi = lohi
+                mid = 0.5 * (lo + hi)
+                below = mid - S(mid, n, f, p0) < 0
+                return (jnp.where(below, mid, lo),
+                        jnp.where(below, hi, mid))
+
+            lo = jnp.zeros_like(n * f)
+            lo, hi = lax.fori_loop(0, _FP_BISECT_ITERS, body,
+                                   (lo, lo + 1.0))
+            return 0.5 * (lo + hi)
+
+        def fwd(n, f, p0):
+            u = fixed_u(n, f, p0)
+            return u, (u, n, f, p0)
+
+        def bwd(res, g):
+            u, n, f, p0 = res
+            # S is elementwise, so vjp against ones is exactly ∂S/∂u.
+            _, vjp_u = jax.vjp(lambda uu: S(uu, n, f, p0), u)
+            ds_du = vjp_u(jnp.ones_like(u))[0]
+            lam = g / (1.0 - ds_du)
+            _, vjp_theta = jax.vjp(
+                lambda nn, ff, pp: S(u, nn, ff, pp), n, f, p0)
+            return vjp_theta(lam)
+
+        fixed_u.defvjp(fwd, bwd)
+        return fixed_u
+
+    def utilization_curve_jax(n, f, *, mode: str, p0_factor, n_max: int,
+                              beta: float | None = None):
         """JAX twin of :func:`utilization_curve` (broadcasting inputs;
         ``n_max`` is the static recursion bound, shared across a vmapped
         batch).  The single jax implementation of the utilization law —
         used by the batched solver below and by the calibration fit
-        (repro.calibrate.fit), so the two cannot drift."""
+        (repro.calibrate.fit), so the two cannot drift.  ``beta`` selects
+        the saturation min of the *gradient path*: None (default) keeps
+        the exact ``jnp.minimum``, a float smooths it with
+        :func:`_softmin_jax` — forward callers always pass None, so
+        values never change."""
+        smin = _min_fn(beta)
         active = n > 0
         if mode == "queue":
-            return jnp.where(active, jnp.minimum(1.0, f * n), 1.0)
-        if mode != "recursion":
-            raise ValueError(f"unknown utilization mode {mode!r}")
-        p0 = p0_factor * f
-        u0 = f + 0.0 * n   # broadcast of the u(1) = f seed
+            return jnp.where(active, smin(1.0, f * n), 1.0)
+        if mode == "recursion":
+            p0 = p0_factor * f
+            u0 = f + 0.0 * n   # broadcast of the u(1) = f seed
 
-        def body(i, u):
-            fi = i.astype(u.dtype)
-            t_i = 1.0 + p0 * u * (fi - 1.0)
-            return jnp.where(fi <= n, jnp.minimum(1.0, fi * f / t_i), u)
+            def body(i, u):
+                fi = i.astype(u.dtype)
+                t_i = 1.0 + p0 * u * (fi - 1.0)
+                return jnp.where(fi <= n, smin(1.0, fi * f / t_i), u)
 
-        u = lax.fori_loop(2, n_max + 1, body, u0)
-        return jnp.where(active & (f > 0), u, 1.0)
+            u = lax.fori_loop(2, n_max + 1, body, u0)
+            return jnp.where(active & (f > 0), u, 1.0)
+        if mode == "fixedpoint":
+            nn, ff = jnp.broadcast_arrays(n + 0.0 * f, f + 0.0 * n)
+            u = _fixedpoint_u_jax(beta)(
+                nn * 1.0, ff * 1.0, jnp.asarray(p0_factor, nn.dtype))
+            return jnp.where(active & (f > 0), u, 1.0)
+        raise ValueError(f"unknown utilization mode {mode!r}")
 
-    def _solve_single_jax(n, f, bs, p0_aux, n_max, *, mode: str):
+    def _solve_single_jax(n, f, bs, p0_aux, n_max, *, mode: str,
+                          beta: float | None = None):
         """One scenario (shape ``(G,)``); vmapped over the batch axis.
 
         ``p0_aux`` carries ``p0_factor`` (recursion) or the fixed
         utilization (mode "fixed").  ``n_max`` is the loop bound, shared
         across the batch so the vmapped ``fori_loop`` stays uniform.
+        ``beta`` is the gradient path's softmin knob (see
+        :func:`utilization_curve_jax`); every piece of this solver other
+        than the saturation min is already smooth, so the whole Eq. 4–5
+        chain is differentiable end to end.
         """
         n_tot = n.sum()
         safe_n = jnp.maximum(n_tot, 1.0)
@@ -298,9 +469,10 @@ if HAVE_JAX:
             util = jnp.ones_like(b)
         elif mode == "fixed":
             util = jnp.where(active, p0_aux, 1.0)
-        else:  # queue / recursion: the shared utilization law
+        else:  # queue / recursion / fixedpoint: the shared law
             util = utilization_curve_jax(n_tot, f_mean, mode=mode,
-                                         p0_factor=p0_aux, n_max=n_max)
+                                         p0_factor=p0_aux, n_max=n_max,
+                                         beta=beta)
         bw = alphas * util * b
         return b, alphas, util, bw
 
@@ -311,6 +483,19 @@ if HAVE_JAX:
             functools.partial(_solve_single_jax, mode=mode, n_max=n_max),
             in_axes=(0, 0, 0, None))
         return jax.jit(vmapped)
+
+    def _build_jax_grad_solver(mode: str, n_max: int, beta: float | None,
+                               argnums: tuple[int, ...]):
+        """Jitted vmap of ``jacrev`` over the single-scenario solver's
+        ``bw_group`` output — reverse mode so the ``"fixedpoint"`` law's
+        ``custom_vjp`` (one linear solve per backward pass) is what runs;
+        registered in the same substrate cache as the forward solvers."""
+        def bw_of(n_, f_, bs_, aux):
+            return _solve_single_jax(n_, f_, bs_, aux, n_max, mode=mode,
+                                     beta=beta)[3]
+
+        jac = jax.jacrev(bw_of, argnums=argnums)
+        return jax.jit(jax.vmap(jac, in_axes=(0, 0, 0, None)))
 
     def _solve_arrays_jax(n, f, bs, *, utilization, p0_factor, saturated):
         """JAX twin of :func:`_solve_arrays_np` (float64 via local x64).
@@ -326,7 +511,7 @@ if HAVE_JAX:
             mode, aux = "saturated", 0.0
         elif isinstance(utilization, (int, float)):
             mode, aux = "fixed", float(utilization)
-        elif utilization in ("queue", "recursion"):
+        elif utilization in UTILIZATION_MODES:
             mode, aux = utilization, p0_factor
         else:
             raise ValueError(f"unknown utilization mode {utilization!r}")
@@ -475,6 +660,103 @@ def solve_batch(n, f, bs, names=None, *,
 
 
 # ---------------------------------------------------------------------------
+# Gradient path: jacobians of the Eq. 4–5 solve wrt its inputs.
+# ---------------------------------------------------------------------------
+
+#: Gradient input names → positional argument of the single-scenario
+#: solver (``plan.grad(wrt=...)`` uses the same vocabulary).
+WRT_ARGNUM = {"cores": 0, "f": 1, "b_s": 2}
+
+
+def _resolve_grad_mode(utilization, saturated):
+    """Map the solver's ``utilization``/``saturated`` knobs onto the jax
+    kernel's static mode + traced aux, exactly like the forward path."""
+    if saturated is True:
+        return "saturated", 0.0
+    if isinstance(utilization, (int, float)):
+        return "fixed", float(utilization)
+    if utilization in UTILIZATION_MODES:
+        return utilization, None
+    raise ValueError(f"unknown utilization mode {utilization!r}")
+
+
+def solve_arrays_and_grad(n, f, bs, *, wrt=("f", "b_s"),
+                          utilization: str | float = "recursion",
+                          p0_factor: float = 0.5,
+                          saturated: bool | None = None,
+                          softmin_beta: float | None = None,
+                          backend: str = "auto",
+                          jax_cutoff: int | None = None
+                          ) -> tuple[tuple[np.ndarray, np.ndarray,
+                                           np.ndarray, np.ndarray],
+                                     dict[str, np.ndarray]]:
+    """Forward Eq. 4–5 solve plus jacobians of ``bw_group`` wrt inputs.
+
+    Returns ``((b, alphas, util, bw), grads)`` where the forward tuple is
+    exactly :func:`solve_arrays` (same ``backend`` dispatch, exact min)
+    and ``grads[name]`` has shape ``(B, G, G)`` with
+    ``grads[name][b, i, j] = ∂ bw_group[b, i] / ∂ name[b, j]``.
+
+    ``wrt`` ⊆ ``("cores", "f", "b_s")`` — ``"cores"`` differentiates wrt
+    the (relaxed, real-valued) thread counts ``n``.  The jacobians run in
+    reverse mode on the jax backend, through :func:`_solve_single_jax`
+    with lax selects everywhere (so padding rows stay neutral) and, in
+    ``"fixedpoint"`` mode, through the implicit-function-theorem
+    ``custom_vjp`` of :func:`_fixedpoint_u_jax`.  ``softmin_beta``
+    smooths the saturation min *of the gradient path only* (forward
+    values never change); None keeps exact a.e. subgradients.  The jitted
+    jacobian kernel lives in the same :mod:`repro.core.backend`
+    power-of-two bucket cache as the forward solvers, so repeat sweeps of
+    nearby batch sizes share one compiled executable.
+
+    Note the Eq. 4–5 coupling is global within a scenario: off-diagonal
+    entries (group i's bandwidth wrt group j's inputs) are genuinely
+    nonzero, and a padded ``n = 0`` group has zero sensitivity to its own
+    ``f``/``b_s`` but a real ``"cores"`` column (adding threads to an
+    empty slot changes the mix).  The placed-grid wrapper
+    (:func:`solve_placed_and_grad`) zeroes masked lanes outright.
+    """
+    if not HAVE_JAX:
+        raise RuntimeError(
+            "solve_arrays_and_grad needs jax for the jacobian path (the "
+            "forward-only solvers keep their numpy fallback); install "
+            "jax[cpu] or finite-difference solve_arrays instead")
+    wrt = tuple(wrt)
+    for name in wrt:
+        if name not in WRT_ARGNUM:
+            from ..api.registry import unknown_key_error
+            raise unknown_key_error("gradient input", name,
+                                    sorted(WRT_ARGNUM))
+    n = np.atleast_2d(np.asarray(n, dtype=np.float64))
+    f = np.atleast_2d(np.asarray(f, dtype=np.float64))
+    bs = np.atleast_2d(np.asarray(bs, dtype=np.float64))
+    mode, fixed_aux = _resolve_grad_mode(utilization, saturated)
+    forward = solve_arrays(
+        n, f, bs, backend=backend, utilization=utilization,
+        p0_factor=p0_factor, saturated=saturated, jax_cutoff=jax_cutoff)
+    B, G = n.shape
+    aux = p0_factor if fixed_aux is None else fixed_aux
+    n_max = int(n.sum(axis=-1).max()) if (n.size and mode == "recursion") \
+        else 0
+    n_max_b = backend_mod.bucket(n_max) if n_max else 0
+    beta = None if softmin_beta is None else float(softmin_beta)
+    argnums = tuple(WRT_ARGNUM[name] for name in wrt)
+    Bb = backend_mod.bucket(B)
+    solver = backend_mod.jitted(
+        ("sharing.grad", mode, beta, argnums, Bb, G, n_max_b),
+        lambda: _build_jax_grad_solver(mode, n_max_b, beta, argnums))
+    with jax.experimental.enable_x64():
+        jacs = solver(
+            jnp.asarray(backend_mod.pad_rows(n, Bb), jnp.float64),
+            jnp.asarray(backend_mod.pad_rows(f, Bb), jnp.float64),
+            jnp.asarray(backend_mod.pad_rows(bs, Bb), jnp.float64),
+            jnp.float64(aux))
+    grads = {name: np.asarray(j)[:B]
+             for name, j in zip(wrt, jacs)}
+    return forward, grads
+
+
+# ---------------------------------------------------------------------------
 # Placement-batched solver: B scenarios × D domains × K groups in one call.
 # ---------------------------------------------------------------------------
 
@@ -575,6 +857,62 @@ def solve_placed_batch(n, f, bs, *, mask=None, names=None,
         b_overlap=b.reshape(B, D), alphas=alphas.reshape(B, D, K),
         util=util.reshape(B, D), bw_group=bw.reshape(B, D, K),
         names=names)
+
+
+def solve_placed_and_grad(n, f, bs, *, mask=None, names=None,
+                          wrt=("f", "b_s"),
+                          utilization: str | float = "recursion",
+                          p0_factor: float = 0.5,
+                          saturated: bool | None = None,
+                          softmin_beta: float | None = None,
+                          backend: str = "auto",
+                          jax_cutoff: int | None = None
+                          ) -> tuple[PlacedBatchSharePrediction,
+                                     dict[str, np.ndarray]]:
+    """Placed-grid twin of :func:`solve_arrays_and_grad`.
+
+    Forward is exactly :func:`solve_placed_batch`; ``grads[name]`` has
+    shape ``(B, D, K, K)`` with
+    ``grads[name][b, d, i, j] = ∂ bw_group[b, d, i] / ∂ name[b, d, j]``
+    (domains are independent Eq. 4–5 instances, so there are no cross-
+    domain terms).  Masked-out lanes are forced to zero *on both jacobian
+    axes*: padding does not exist in the scenario, so its sensitivities —
+    including the mathematically nonzero ``"cores"`` column a relaxed
+    empty slot would carry — are defined to be 0, and poisoned padding
+    (NaN/inf) cannot leak into real lanes' gradients any more than it can
+    into their values.
+    """
+    n = np.asarray(n, dtype=np.float64)
+    if n.ndim == 2:
+        n = n[None]
+    f = np.broadcast_to(np.asarray(f, dtype=np.float64), n.shape)
+    bs = np.broadcast_to(np.asarray(bs, dtype=np.float64), n.shape)
+    if n.ndim != 3:
+        raise ValueError(
+            f"placed batches are (B, D, K) arrays, got shape {n.shape}")
+    if mask is None:
+        mask = n > 0
+    else:
+        mask = np.broadcast_to(np.asarray(mask, dtype=bool), n.shape)
+    zero = np.zeros_like(n)
+    n = np.where(mask, n, zero)
+    f = np.where(mask, f, zero)
+    bs = np.where(mask, bs, zero)
+    B, D, K = n.shape
+    (b, alphas, util, bw), flat_grads = solve_arrays_and_grad(
+        n.reshape(B * D, K), f.reshape(B * D, K), bs.reshape(B * D, K),
+        wrt=wrt, utilization=utilization, p0_factor=p0_factor,
+        saturated=saturated, softmin_beta=softmin_beta, backend=backend,
+        jax_cutoff=jax_cutoff)
+    lane = mask[..., :, None] & mask[..., None, :]   # (B, D, K, K)
+    grads = {name: np.where(lane, g.reshape(B, D, K, K), 0.0)
+             for name, g in flat_grads.items()}
+    pred = PlacedBatchSharePrediction(
+        n=n, f=f, bs=bs, mask=mask,
+        b_overlap=b.reshape(B, D), alphas=alphas.reshape(B, D, K),
+        util=util.reshape(B, D), bw_group=bw.reshape(B, D, K),
+        names=names)
+    return pred, grads
 
 
 def groups_to_arrays(scenarios: Sequence[Sequence[Group]]

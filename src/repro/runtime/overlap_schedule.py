@@ -17,12 +17,15 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Sequence
 
+import numpy as np
+
 from ..api import Scenario, ScenarioBatch
 from ..api import compile as compile_plan
 from ..configs.base import ModelConfig
 from ..core.hlo import RooflineTerms
 from ..core.machine import TPU_V5E, TpuModel
 from ..core.overlap import Phase, best_bucket_count, overlap_pair
+from ..core.sharing import solve_arrays
 from ..core.topology import Topology, tpu_pod
 
 
@@ -239,12 +242,278 @@ def evaluate_pod_plans(terms: RooflineTerms,
     return out
 
 
-def best_pod_plan(terms: RooflineTerms,
-                  candidate_loads: Sequence[Sequence[float]],
-                  **kwargs) -> tuple[int, PodPlanEvaluation]:
-    """Index and evaluation of the fastest candidate in one batched run."""
-    evals = evaluate_pod_plans(terms, candidate_loads, **kwargs)
-    if not evals:
+# ---------------------------------------------------------------------------
+# Gradient co-design: continuous relaxation of the pod-plan search
+# ---------------------------------------------------------------------------
+
+
+POD_PLAN_METHODS = ("enumerate", "gradient")
+
+
+@dataclasses.dataclass(frozen=True)
+class PodStepCoefficients:
+    """The noiseless desync step, reduced to closed form.
+
+    One rank per chip domain means nothing ever contends: each chip's
+    backward pass attains the lone-group bandwidth of its domain (Eq. 4–5
+    with a single group), the gradient allreduce is a barrier of fixed
+    wire time, and the collective drain runs solo afterwards.  The step
+    time is therefore exactly
+
+        ``t(x) = max_c(a_c * x_c) + const``
+
+    with ``a_c`` the seconds of backward HBM work per unit load on chip
+    ``c`` and ``const = wire_s + t_drain``.  ``a_c`` is computed through
+    :func:`repro.core.sharing.solve_arrays` — the same Eq. 4–5 solve the
+    desync engine performs per event — so the analytic makespan matches
+    the simulated one to float precision and stays differentiable in the
+    loads.
+    """
+
+    chips: tuple[str, ...]
+    a: np.ndarray          # (C,) seconds per unit load on each chip
+    const: float           # barrier wire time + collective drain time
+
+    def makespan(self, loads) -> np.ndarray:
+        """``max_c(a_c * x_c) + const`` for one load vector or a batch
+        of them (last axis = chips)."""
+        x = np.asarray(loads, dtype=np.float64)
+        return np.max(self.a * x, axis=-1) + self.const
+
+    def makespan_and_grad(self, loads, *, softmax_tau: float | None = None
+                          ) -> tuple[float, np.ndarray]:
+        """Exact makespan plus its gradient in the loads.
+
+        The max is piecewise linear; the default gradient is the
+        subgradient averaged over (near-)argmax chips.  ``softmax_tau``
+        smooths it — weights ``softmax((a*x)/tau)`` — mirroring the
+        softmin knob in :mod:`repro.core.sharing`: forward values never
+        change, only the gradient path.
+        """
+        x = np.asarray(loads, dtype=np.float64)
+        z = self.a * x
+        m = float(np.max(z))
+        if softmax_tau is not None:
+            if softmax_tau <= 0:
+                raise ValueError(f"softmax_tau must be > 0, got "
+                                 f"{softmax_tau}")
+            w = np.exp((z - m) / softmax_tau)
+        else:
+            w = (z >= m - 1e-12 * max(abs(m), 1.0)).astype(np.float64)
+        w = w / w.sum()
+        return m + self.const, w * self.a
+
+
+def pod_step_coefficients(terms: RooflineTerms, *,
+                          topology: Topology | None = None,
+                          backward_frac: float = 2 / 3,
+                          tpu: TpuModel = TPU_V5E) -> PodStepCoefficients:
+    """Closed-form coefficients of the noiseless pod step (see
+    :class:`PodStepCoefficients`).  Built from the identical phase
+    decomposition :func:`evaluate_pod_plans` hands the simulator."""
+    topo = topology if topology is not None else tpu_pod(tpu)
+    chips = topo.domain_names
+    nc = len(chips)
+    bwd = Phase("bwd", flops=terms.flops * backward_frac,
+                hbm_bytes=terms.hbm_bytes * backward_frac)
+    drain = Phase("grad_drain", hbm_bytes=2.0 * terms.wire_bytes)
+    wire_s = Phase("wire", ici_bytes=terms.wire_bytes).times(tpu)[2]
+    f_bwd = max(bwd.request_fraction(tpu), 1e-6)
+    f_drn = max(drain.request_fraction(tpu), 1e-6)
+    # Lone-group Eq. 4–5 solves — the bwd and drain phases never coexist
+    # on a chip (the barrier separates them), so each is a single-group
+    # row.  Identical law and parameters to the engine's per-event
+    # solve, so the analytic step reproduces the simulation.
+    _, _, _, bw = solve_arrays(
+        np.ones((nc, 1)), np.full((nc, 1), f_bwd),
+        np.full((nc, 1), tpu.hbm_bw_gbs), backend="numpy")
+    _, _, _, bw_d = solve_arrays(
+        np.ones((1, 1)), np.full((1, 1), f_drn),
+        np.full((1, 1), tpu.hbm_bw_gbs), backend="numpy")
+    a = bwd.hbm_bytes / (np.maximum(bw[:, 0], 1e-30) * 1e9)
+    t_drain = (drain.hbm_bytes / (float(bw_d[0, 0]) * 1e9)
+               if drain.hbm_bytes > 0 else 0.0)
+    return PodStepCoefficients(chips=tuple(chips), a=a,
+                               const=wire_s + t_drain)
+
+
+def _project_capped_simplex(y: np.ndarray, total: float,
+                            lb: np.ndarray, ub: np.ndarray) -> np.ndarray:
+    """Euclidean projection onto ``{x : sum(x) = total, lb <= x <= ub}``
+    by bisection on the dual variable of the sum constraint.
+
+    ``sum(clip(y - lam, lb, ub))`` is monotone non-increasing in ``lam``,
+    so 60 halvings pin it to float precision."""
+    if not (lb.sum() - 1e-9 <= total <= ub.sum() + 1e-9):
+        raise ValueError(
+            f"infeasible projection: need sum(lb)={lb.sum():.6g} <= "
+            f"total={total:.6g} <= sum(ub)={ub.sum():.6g}")
+    lo = float(np.min(y - ub))
+    hi = float(np.max(y - lb))
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if np.clip(y - mid, lb, ub).sum() > total:
+            lo = mid
+        else:
+            hi = mid
+    return np.clip(y - 0.5 * (lo + hi), lb, ub)
+
+
+def relax_pod_plan(coeffs: PodStepCoefficients, *, total: float,
+                   lb: Sequence[float], ub: Sequence[float],
+                   iters: int = 300, softmax_tau: float | None = None
+                   ) -> tuple[np.ndarray, float, int]:
+    """Projected gradient descent on the analytic makespan over the
+    continuous load polytope ``{sum(x) = total, lb <= x <= ub}``.
+
+    Returns ``(x_star, t_star, n_iters)`` — the best iterate by *exact*
+    makespan (the smoothed gradient only steers the descent).  The
+    objective is piecewise linear and the feasible set is a box-capped
+    simplex, so a diminishing-step projected (sub)gradient converges to
+    the balanced optimum ``a_c * x_c = const``.
+    """
+    lb = np.asarray(lb, dtype=np.float64)
+    ub = np.asarray(ub, dtype=np.float64)
+    x = _project_capped_simplex(
+        np.full(len(coeffs.a), total / len(coeffs.a)), total, lb, ub)
+    t_x = float(coeffs.makespan(x))
+    best_x, best_t = x, t_x
+    span = float(np.max(ub - lb))
+    if span <= 0 or iters <= 0:       # a point polytope: nothing to move
+        return best_x, best_t, 0
+    tau = softmax_tau if softmax_tau is not None else max(
+        1e-3 * best_t, 1e-30)
+    stall = 0
+    it = 0
+    for it in range(1, iters + 1):
+        _, g = coeffs.makespan_and_grad(x, softmax_tau=tau)
+        gmax = float(np.max(np.abs(g)))
+        if gmax <= 0:
+            break
+        eta = 0.5 * span / gmax / (1.0 + 0.05 * it)
+        x = _project_capped_simplex(x - eta * g, total, lb, ub)
+        t_x = float(coeffs.makespan(x))
+        if t_x < best_t * (1.0 - 1e-12):
+            best_x, best_t, stall = x, t_x, 0
+        else:
+            stall += 1
+            if stall >= 50:
+                break
+    return best_x, best_t, it
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientPlanResult:
+    """Outcome of the gradient-relaxed pod-plan search.
+
+    ``x_relaxed``/``t_relaxed`` are the continuous optimum and its
+    analytic makespan; ``shortlist`` holds the candidate indices that
+    were actually simulated (ranked by analytic makespan, ties broken
+    toward the relaxed point); ``best_index``/``best`` identify the
+    verified winner among them."""
+
+    coefficients: PodStepCoefficients
+    x_relaxed: tuple[float, ...]
+    t_relaxed: float
+    n_iters: int
+    n_candidates: int
+    shortlist: tuple[int, ...]
+    best_index: int
+    best: PodPlanEvaluation
+
+
+def gradient_pod_plan(terms: RooflineTerms,
+                      candidate_loads: Sequence[Sequence[float]], *,
+                      topology: Topology | None = None,
+                      backward_frac: float = 2 / 3,
+                      tpu: TpuModel = TPU_V5E,
+                      shortlist: int = 8,
+                      iters: int = 300,
+                      softmax_tau: float | None = None,
+                      **sim_kwargs) -> GradientPlanResult:
+    """Pick a pod plan by gradient descent instead of full enumeration.
+
+    The analytic makespan (:func:`pod_step_coefficients`) is descended
+    over the continuous load polytope spanned by the candidates, the
+    candidates are ranked by that same analytic objective (ties broken
+    by distance to the relaxed optimum — the rounding step), and only
+    the top ``shortlist`` are verified through the desync simulator via
+    :func:`evaluate_pod_plans` (which still accepts ``noise_s``/
+    ``ensemble``/``backend`` through ``sim_kwargs``).  Simulation cost
+    is O(shortlist) instead of O(candidates).
+
+    All candidates must distribute the *same* total load — the gradient
+    walks a fixed-sum polytope; mixed totals are a different design
+    space and raise ``ValueError``.
+    """
+    topo = topology if topology is not None else tpu_pod(tpu)
+    chips = topo.domain_names
+    loads = np.asarray([tuple(c) for c in candidate_loads],
+                       dtype=np.float64)
+    if loads.size == 0:
         raise ValueError("no candidate plans given")
-    i = min(range(len(evals)), key=lambda j: evals[j].t_step)
-    return i, evals[i]
+    if loads.ndim != 2 or loads.shape[1] != len(chips):
+        raise ValueError(
+            f"candidates have {loads.shape[-1] if loads.ndim == 2 else '?'}"
+            f" loads for {len(chips)} chips")
+    sums = loads.sum(axis=1)
+    total = float(sums[0])
+    if not np.allclose(sums, total, rtol=1e-6, atol=1e-12):
+        raise ValueError(
+            "gradient method needs every candidate to distribute the same "
+            f"total load; candidate sums span [{sums.min():.6g}, "
+            f"{sums.max():.6g}]")
+    if shortlist < 1:
+        raise ValueError(f"shortlist must be >= 1, got {shortlist}")
+
+    coeffs = pod_step_coefficients(terms, topology=topo,
+                                   backward_frac=backward_frac, tpu=tpu)
+    x_star, t_star, n_iters = relax_pod_plan(
+        coeffs, total=total, lb=loads.min(axis=0), ub=loads.max(axis=0),
+        iters=iters, softmax_tau=softmax_tau)
+    # Round: rank candidates on the analytic objective, breaking ties by
+    # closeness to the relaxed optimum, then sim-verify the survivors.
+    t_cand = coeffs.makespan(loads)
+    d2 = np.sum((loads - x_star) ** 2, axis=1)
+    order = np.lexsort((d2, t_cand))
+    keep = [int(i) for i in order[:min(shortlist, len(order))]]
+    evals = evaluate_pod_plans(terms, [tuple(loads[i]) for i in keep],
+                               topology=topo, backward_frac=backward_frac,
+                               tpu=tpu, **sim_kwargs)
+    j = min(range(len(evals)), key=lambda k: evals[k].t_step)
+    return GradientPlanResult(
+        coefficients=coeffs,
+        x_relaxed=tuple(float(v) for v in x_star),
+        t_relaxed=t_star,
+        n_iters=n_iters,
+        n_candidates=len(loads),
+        shortlist=tuple(keep),
+        best_index=keep[j],
+        best=evals[j])
+
+
+def best_pod_plan(terms: RooflineTerms,
+                  candidate_loads: Sequence[Sequence[float]], *,
+                  method: str = "enumerate",
+                  shortlist: int = 8,
+                  **kwargs) -> tuple[int, PodPlanEvaluation]:
+    """Index and evaluation of the fastest candidate.
+
+    ``method="enumerate"`` simulates every candidate in one batched
+    desync run (exhaustive, O(candidates) simulation rows);
+    ``method="gradient"`` descends the analytic makespan and simulates
+    only a shortlist (see :func:`gradient_pod_plan`) — the right tool
+    when the candidate space is too large to enumerate."""
+    if method == "enumerate":
+        evals = evaluate_pod_plans(terms, candidate_loads, **kwargs)
+        if not evals:
+            raise ValueError("no candidate plans given")
+        i = min(range(len(evals)), key=lambda j: evals[j].t_step)
+        return i, evals[i]
+    if method == "gradient":
+        res = gradient_pod_plan(terms, candidate_loads,
+                                shortlist=shortlist, **kwargs)
+        return res.best_index, res.best
+    from ..api.registry import unknown_key_error
+    raise unknown_key_error("pod-plan method", method,
+                            list(POD_PLAN_METHODS))

@@ -207,7 +207,9 @@ def test_utilization_curve_matches_solver_envelope():
 def test_utilization_curve_neutral_entries():
     u = utilization_curve([0, 1, 4], 0.25, mode="queue")
     assert u[0] == 1.0 and u[1] == 0.25 and u[2] == 1.0
-    with pytest.raises(ValueError, match="utilization"):
+    # A typo'd mode raises the registry's suggestion-bearing KeyError
+    # (the solver-level utilization= check stays a ValueError).
+    with pytest.raises(KeyError, match="utilization mode"):
         utilization_curve([1], 0.2, mode="nope")
 
 

@@ -1,0 +1,340 @@
+"""Gradient correctness for the differentiable Eq. 1–5 forward chain.
+
+Every analytic jacobian the repo exposes is checked against central
+finite differences at 1e-5 relative tolerance:
+
+* ``sharing.solve_arrays_and_grad`` — all utilization laws × all
+  gradient inputs (``f``, ``b_s``, ``cores``);
+* the fixed-point law's implicit-function-theorem ``custom_vjp``;
+* ``sharing.solve_placed_and_grad`` — masked placed batches, with
+  gradients exactly zero where the mask poisons padding;
+* ``desync_batch.work_durations_and_grad`` — the engine's step-timing
+  twin;
+* the softmin knob — forward values unchanged, gradient path smoothed;
+* the facade (``plan.grad`` / ``Sensitivities``) and the gradient
+  pod-plan co-design built on top.
+
+The recursion law is a staircase in *integer* n (its sweep masks on
+``i <= n``), so the ``cores`` checks use non-integer occupancies where
+the law is locally smooth; the fixed-point law is continuous in n by
+construction — that is what makes it the co-design relaxation — and is
+additionally checked at integer n.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import sharing
+from repro.core.backend import HAVE_JAX
+from repro.core.desync_batch import work_durations, work_durations_and_grad
+
+jax_only = pytest.mark.skipif(not HAVE_JAX, reason="jax not importable")
+
+RTOL = 1e-5
+
+# Non-integer occupancies: smooth for every law (see module docstring).
+N0 = np.array([[2.3, 4.6], [1.4, 3.2]])
+F0 = np.array([[0.42, 0.71], [0.93, 0.18]])
+BS0 = np.array([[82.0, 95.0], [120.0, 105.0]])
+
+_ARG = {"cores": 0, "f": 1, "b_s": 2}
+
+
+def _fd_jacobian(n, f, bs, wrt, mode, eps=1e-6, **kw):
+    """Central-difference ∂bw[b, i]/∂wrt[b, j] via the forward solver."""
+    arrs = [np.asarray(a, dtype=np.float64) for a in (n, f, bs)]
+    B, G = arrs[0].shape
+    k = _ARG[wrt]
+    out = np.zeros((B, G, G))
+    for b in range(B):
+        for j in range(G):
+            hi = [a.copy() for a in arrs]
+            lo = [a.copy() for a in arrs]
+            hi[k][b, j] += eps
+            lo[k][b, j] -= eps
+            _, _, _, bw_hi = sharing.solve_arrays(
+                *hi, utilization=mode, backend="numpy", **kw)
+            _, _, _, bw_lo = sharing.solve_arrays(
+                *lo, utilization=mode, backend="numpy", **kw)
+            out[b, :, j] = (bw_hi[b] - bw_lo[b]) / (2 * eps)
+    return out
+
+
+def _assert_close(got, want, label):
+    denom = np.abs(want) + 1e-9
+    rel = np.max(np.abs(got - want) / denom)
+    assert rel < RTOL, f"{label}: max rel err {rel:.3e}"
+
+
+# ---------------------------------------------------------------------------
+# solve_arrays_and_grad: every law × every input
+# ---------------------------------------------------------------------------
+
+
+@jax_only
+@pytest.mark.parametrize("mode", sharing.UTILIZATION_MODES)
+@pytest.mark.parametrize("wrt", ["f", "b_s", "cores"])
+def test_solve_grad_matches_fd(mode, wrt):
+    (b, alphas, util, bw), grads = sharing.solve_arrays_and_grad(
+        N0, F0, BS0, wrt=(wrt,), utilization=mode)
+    # forward outputs are the plain solve, bit for bit
+    fb, fa, fu, fbw = sharing.solve_arrays(N0, F0, BS0, utilization=mode,
+                                           backend="numpy")
+    np.testing.assert_allclose(bw, fbw, rtol=1e-12)
+    _assert_close(grads[wrt], _fd_jacobian(N0, F0, BS0, wrt, mode),
+                  f"{mode}/{wrt}")
+
+
+@jax_only
+def test_fixedpoint_implicit_vjp_continuous_at_integer_n():
+    """The fixed-point law is smooth in n even at integers — the property
+    the pod-plan relaxation depends on (the IFT vjp must agree with FD
+    straddling an integer occupancy)."""
+    n = np.array([[2.0, 4.0]])
+    _, grads = sharing.solve_arrays_and_grad(
+        n, F0[:1], BS0[:1], wrt=("cores",), utilization="fixedpoint")
+    _assert_close(grads["cores"],
+                  _fd_jacobian(n, F0[:1], BS0[:1], "cores", "fixedpoint"),
+                  "fixedpoint/cores@integer-n")
+
+
+@jax_only
+def test_utilization_curve_grad_matches_fd():
+    """The numpy-side analytic dU/df (used by the Gauss–Newton fit)
+    agrees with FD for every law."""
+    n = np.array([1.0, 2.7, 6.3, 14.0])
+    eps = 1e-7
+    for mode in sharing.UTILIZATION_MODES:
+        u, du = sharing.utilization_curve_grad(n, 0.37, mode=mode)
+        np.testing.assert_allclose(
+            u, sharing.utilization_curve(n, 0.37, mode=mode), rtol=1e-12)
+        fd = (sharing.utilization_curve(n, 0.37 + eps, mode=mode)
+              - sharing.utilization_curve(n, 0.37 - eps, mode=mode)) \
+            / (2 * eps)
+        _assert_close(du, fd, f"utilization_curve_grad/{mode}")
+
+
+@jax_only
+def test_unknown_wrt_suggests():
+    with pytest.raises(KeyError, match="gradient input"):
+        sharing.solve_arrays_and_grad(N0, F0, BS0, wrt=("bs",))
+
+
+# ---------------------------------------------------------------------------
+# Softmin knob: forward unchanged, gradients smoothed
+# ---------------------------------------------------------------------------
+
+
+@jax_only
+def test_softmin_changes_gradients_not_values():
+    (_, _, _, bw), g_exact = sharing.solve_arrays_and_grad(
+        N0, F0, BS0, wrt=("f",), utilization="queue")
+    (_, _, _, bw_soft), g_soft = sharing.solve_arrays_and_grad(
+        N0, F0, BS0, wrt=("f",), utilization="queue", softmin_beta=50.0)
+    np.testing.assert_allclose(bw_soft, bw, rtol=1e-12)
+    assert np.all(np.isfinite(g_soft["f"]))
+    # At the saturation kink the exact path picks a subgradient branch;
+    # the smoothed path blends — they must differ somewhere.
+    n_kink = np.array([[1.0 / 0.42, 4.6], [1.4, 3.2]])
+    _, ge = sharing.solve_arrays_and_grad(
+        n_kink, F0, BS0, wrt=("f",), utilization="queue")
+    _, gs = sharing.solve_arrays_and_grad(
+        n_kink, F0, BS0, wrt=("f",), utilization="queue",
+        softmin_beta=5.0)
+    assert not np.allclose(ge["f"], gs["f"])
+
+
+# ---------------------------------------------------------------------------
+# Placed batches: masked padding has exactly zero gradient
+# ---------------------------------------------------------------------------
+
+
+@jax_only
+def test_placed_grad_masked_padding_is_zero():
+    B, D, K = 2, 2, 3
+    rng = np.random.default_rng(7)
+    n = rng.uniform(1.2, 6.8, (B, D, K))
+    f = rng.uniform(0.1, 0.9, (B, D, K))
+    bs = rng.uniform(50.0, 150.0, (B, D, K))
+    mask = np.ones((B, D, K), bool)
+    mask[0, 1, 2] = False
+    mask[1, 0, 0] = False
+    # Poison the padding: gradients must not propagate NaN/inf.
+    n[~mask] = np.nan
+    f[~mask] = np.inf
+    pred, grads = sharing.solve_placed_and_grad(
+        n, f, bs, mask=mask, wrt=("f", "b_s", "cores"))
+    lane = mask[..., :, None] & mask[..., None, :]
+    for name, g in grads.items():
+        assert g.shape == (B, D, K, K), name
+        assert np.all(np.isfinite(g)), name
+        assert np.all(g[~lane] == 0.0), name
+    # Live lanes match FD on the sanitized arrays.
+    n_c = np.where(mask, n, 0.0)
+    f_c = np.where(mask, f, 0.0)
+    eps = 1e-6
+    d, k = 0, 1
+    hi, lo = f_c.copy(), f_c.copy()
+    hi[0, d, k] += eps
+    lo[0, d, k] -= eps
+    p_hi = sharing.solve_placed_batch(n_c, hi, bs, mask=mask,
+                                      backend="numpy")
+    p_lo = sharing.solve_placed_batch(n_c, lo, bs, mask=mask,
+                                      backend="numpy")
+    fd = (p_hi.bw_group[0, d] - p_lo.bw_group[0, d]) / (2 * eps)
+    _assert_close(grads["f"][0, d, :, k], fd, "placed/f live lane")
+
+
+# ---------------------------------------------------------------------------
+# Desync step-timing twin
+# ---------------------------------------------------------------------------
+
+
+@jax_only
+def test_work_durations_grad_matches_fd():
+    by = np.array([[1e9, 2e9], [5e8, 3e9]])
+    t, grads = work_durations_and_grad(N0, F0, BS0, by,
+                                       wrt=("f", "b_s", "cores"))
+    np.testing.assert_allclose(t, work_durations(N0, F0, BS0, by),
+                               rtol=1e-12)
+    eps = 1e-6
+    arrs = {"f": F0, "b_s": BS0, "cores": N0}
+    for wrt, base in arrs.items():
+        k = _ARG[wrt]
+        fd = np.zeros((2, 2, 2))
+        for b in range(2):
+            for j in range(2):
+                args_hi = [N0.copy(), F0.copy(), BS0.copy()]
+                args_lo = [N0.copy(), F0.copy(), BS0.copy()]
+                args_hi[k][b, j] += eps
+                args_lo[k][b, j] -= eps
+                fd[b, :, j] = (work_durations(*args_hi, by)[b]
+                               - work_durations(*args_lo, by)[b]) \
+                    / (2 * eps)
+        _assert_close(grads[wrt], fd, f"work_durations/{wrt}")
+
+
+@jax_only
+def test_work_durations_masked_groups_are_zero():
+    n = np.array([[2.0, 0.0]])
+    by = np.array([[1e9, 0.0]])
+    t, grads = work_durations_and_grad(n, F0[:1], BS0[:1], by,
+                                       wrt=("f", "b_s", "cores"))
+    assert t[0, 1] == 0.0
+    for name, g in grads.items():
+        assert np.all(g[0, 1, :] == 0.0), name
+
+
+# ---------------------------------------------------------------------------
+# Facade: plan.grad + Sensitivities schema
+# ---------------------------------------------------------------------------
+
+
+@jax_only
+def test_plan_grad_scalar_matches_run_fd():
+    from repro import api
+    plan = api.compile(
+        api.Scenario.on("CLX").run("DCOPY", 4).run("DAXPY", 6))
+    pred = plan.grad(wrt=("f", "b_s", "cores"))
+    assert pred.sensitivities is not None
+    assert pred.sensitivities.wrt == ("f", "b_s", "cores")
+    G = len(pred.groups)
+    jac = pred.sensitivities["f"]
+    assert jac.shape == (G, G)
+    f0 = np.array([g.f for g in pred.groups])
+    eps = 1e-6
+    for j in range(G):
+        hi, lo = f0.copy(), f0.copy()
+        hi[j] += eps
+        lo[j] -= eps
+        fd = (np.array(plan.run(f=hi).bw_group)
+              - np.array(plan.run(f=lo).bw_group)) / (2 * eps)
+        _assert_close(jac[:, j], fd, f"plan.grad f[{j}]")
+    # forward block is the unchanged plain solve
+    np.testing.assert_allclose(pred.bw_group, plan.run().bw_group)
+
+
+@jax_only
+def test_sensitivities_round_trip():
+    from repro import api
+    plan = api.compile(
+        api.Scenario.on("CLX").run("DCOPY", 4).run("DDOT2", 2))
+    pred = plan.grad()
+    d = pred.to_dict()
+    assert d["sensitivities"]["kind"] == "sensitivities"
+    back = api.Prediction.from_dict(d)
+    for name in pred.sensitivities.wrt:
+        np.testing.assert_allclose(back.sensitivities[name],
+                                   pred.sensitivities[name])
+    with pytest.raises(KeyError, match="gradient input"):
+        pred.sensitivities["nope"]
+
+
+@jax_only
+def test_simulate_plan_grad_raises():
+    from repro import api
+    plan = api.compile(
+        api.Scenario.on("CLX").ranks(2).step("DCOPY", 1e9),
+        verb="simulate")
+    with pytest.raises(NotImplementedError, match="while_loop"):
+        plan.grad()
+
+
+# ---------------------------------------------------------------------------
+# Co-design: gradient pod-plan search
+# ---------------------------------------------------------------------------
+
+
+def _terms():
+    from repro.core.hlo import RooflineTerms
+    return RooflineTerms(name="step", t_compute=0.0, t_memory=0.0,
+                         t_collective=0.0, flops=2.0e12, hbm_bytes=8.0e9,
+                         wire_bytes=1.0e9, model_flops=2.0e12)
+
+
+def test_pod_coefficients_match_simulation():
+    from repro.runtime.overlap_schedule import (evaluate_pod_plans,
+                                                pod_step_coefficients)
+    terms = _terms()
+    coeffs = pod_step_coefficients(terms)
+    cands = [(1.0, 1.0, 1.0, 1.0), (1.3, 0.9, 0.9, 0.9),
+             (0.7, 1.1, 1.1, 1.1)]
+    for cand, ev in zip(cands, evaluate_pod_plans(terms, cands)):
+        assert float(coeffs.makespan(cand)) == pytest.approx(
+            ev.t_step, rel=1e-12)
+
+
+def test_gradient_pod_plan_recovers_enumerator():
+    from repro.runtime.overlap_schedule import best_pod_plan
+    terms = _terms()
+    vals = [0.7, 0.85, 1.0, 1.15, 1.3]
+    grid = [c for c in itertools.product(vals, repeat=4)
+            if abs(sum(c) - 4.0) < 1e-12]
+    i_e, e_e = best_pod_plan(terms, grid, method="enumerate")
+    i_g, e_g = best_pod_plan(terms, grid, method="gradient")
+    assert e_g.t_step <= e_e.t_step * 1.01 + 1e-18
+    assert i_g == i_e  # noiseless: the analytic objective is exact
+
+
+def test_pod_plan_method_validation():
+    from repro.runtime.overlap_schedule import (best_pod_plan,
+                                                gradient_pod_plan)
+    terms = _terms()
+    grid = [(1.0, 1.0, 1.0, 1.0), (1.2, 0.8, 1.0, 1.0)]
+    with pytest.raises(KeyError, match="pod-plan method"):
+        best_pod_plan(terms, grid, method="gradiant")
+    with pytest.raises(ValueError, match="total load"):
+        gradient_pod_plan(terms, [(1.0,) * 4, (1.1, 1.0, 1.0, 1.0)])
+
+
+def test_makespan_grad_softmax_knob():
+    from repro.runtime.overlap_schedule import pod_step_coefficients
+    coeffs = pod_step_coefficients(_terms())
+    x = np.array([1.2, 0.9, 1.0, 0.9])
+    t_exact, g_exact = coeffs.makespan_and_grad(x)
+    t_soft, g_soft = coeffs.makespan_and_grad(x, softmax_tau=1e-4)
+    assert t_soft == t_exact            # forward never changes
+    assert g_exact.sum() == pytest.approx(np.max(coeffs.a * x) / 1.2)
+    assert np.all(g_soft >= 0) and np.isfinite(g_soft).all()

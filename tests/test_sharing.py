@@ -102,6 +102,24 @@ def test_runtime_prediction():
     assert t[1] == pytest.approx(2 * t[0])
 
 
+def test_utilization_curve_typo_mode_suggests():
+    """A typo'd mode= raises the registry's suggestion-bearing
+    unknown-key error instead of silently falling through."""
+    with pytest.raises(KeyError) as ei:
+        sharing.utilization_curve([1, 2], 0.3, mode="recurson")
+    msg = str(ei.value)
+    assert "recurson" in msg
+    assert "did you mean 'recursion'" in msg
+    for known in sharing.UTILIZATION_MODES:
+        assert known in msg
+
+
+def test_utilization_curve_known_modes_accepted():
+    for mode in sharing.UTILIZATION_MODES:
+        u = sharing.utilization_curve([1, 4, 9], 0.3, mode=mode)
+        assert ((0 <= u) & (u <= 1)).all()
+
+
 # ---------------------------------------------------------------------------
 # Property tests
 # ---------------------------------------------------------------------------
