@@ -26,8 +26,9 @@ from repro.api import dump_dicts
 
 from . import (api_overhead, calibrate_roundtrip, desync_scaling,
                fig6_full_domain, fig7_symmetric, fig8_error, fig9_pairings,
-               grad_calibration, hpcg_desync, placement_scaling,
-               plan_overhead, table2_kernels, tpu_overlap)
+               grad_calibration, hpcg_desync, obs_overhead,
+               placement_scaling, plan_overhead, table2_kernels,
+               tpu_overlap)
 
 MODULES = {
     "table2": table2_kernels,
@@ -43,6 +44,7 @@ MODULES = {
     "plan_overhead": plan_overhead,
     "placement_scaling": placement_scaling,
     "grad": grad_calibration,
+    "obs": obs_overhead,
 }
 
 

@@ -1,0 +1,102 @@
+"""Benchmark-trend gate: validate every committed BENCH_*.json.
+
+The repo commits one JSON artifact per benchmark (BENCH_placement.json,
+BENCH_plan.json, ...).  Each artifact already records whether its own
+acceptance bounds held when it was produced; this checker re-reads the
+committed files and fails CI if
+
+* any artifact with an ``ok`` flag says ``false`` (a regression was
+  committed), or
+* a tracked *headline metric* slipped below its floor — the floors are
+  restated here so a benchmark that silently relaxed its own bound
+  still trips the gate, or
+* an expected artifact is missing or unparseable.
+
+``python benchmarks/trend.py`` prints one line per check and exits
+nonzero on the first failure (after printing all of them).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+#: (artifact, dotted path into the JSON, comparator, floor/ceiling).
+#: Comparators: ">=" metric must stay at or above, "<" strictly below.
+HEADLINES = [
+    ("BENCH_placement.json", "results.speedup_vs_percall", ">=", 10.0),
+    ("BENCH_placement.json", "results.jit_cache.hit_rate", ">=", 1.0),
+    ("BENCH_plan.json", "results.speedup_vs_percall", ">=", 5.0),
+    ("BENCH_calibrate.json", "max_f_err", "<", 0.08),
+    ("BENCH_calibrate.json", "max_bs_err", "<", 0.08),
+    ("BENCH_calibrate.json", "max_pair_err", "<", 0.08),
+    ("BENCH_desync.json", "speedup.x", ">=", 5.0),
+    ("BENCH_obs.json", "results.disabled_overhead_frac", "<", 0.02),
+    ("BENCH_obs.json", "results.enabled_overhead_frac", "<", 0.10),
+]
+
+#: Artifacts whose top-level ``ok`` flag must be true.
+OK_FLAGGED = ("BENCH_api.json", "BENCH_calibrate.json", "BENCH_grad.json",
+              "BENCH_obs.json", "BENCH_placement.json", "BENCH_plan.json")
+
+
+def _dig(obj, path: str):
+    for part in path.split("."):
+        if not isinstance(obj, dict) or part not in obj:
+            return None
+        obj = obj[part]
+    return obj
+
+
+def check_dir(root: str) -> list[tuple[str, bool]]:
+    """One (message, passed) row per check, in declaration order."""
+    rows: list[tuple[str, bool]] = []
+    cache: dict[str, dict | None] = {}
+
+    def load(name: str):
+        if name not in cache:
+            path = os.path.join(root, name)
+            try:
+                with open(path) as fh:
+                    cache[name] = json.load(fh)
+            except (OSError, ValueError):
+                cache[name] = None
+        return cache[name]
+
+    for name in OK_FLAGGED:
+        doc = load(name)
+        if doc is None:
+            rows.append((f"{name}: missing or unparseable", False))
+        else:
+            ok = doc.get("ok") is True
+            rows.append((f"{name}: ok={doc.get('ok')}", ok))
+
+    for name, path, op, bound in HEADLINES:
+        doc = load(name)
+        val = _dig(doc, path) if doc is not None else None
+        if not isinstance(val, (int, float)):
+            rows.append((f"{name}: {path} missing", False))
+            continue
+        passed = val >= bound if op == ">=" else val < bound
+        rows.append((f"{name}: {path}={val:g} {op} {bound:g}", passed))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json artifacts")
+    args = ap.parse_args(argv)
+    rows = check_dir(args.dir)
+    n_fail = 0
+    for msg, passed in rows:
+        print(("PASS " if passed else "FAIL ") + msg)
+        n_fail += not passed
+    print(f"{len(rows) - n_fail}/{len(rows)} benchmark trend checks passed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -58,6 +58,7 @@ from ..core import topology as topology_mod
 from ..core.desync import Allreduce, Idle, Item, WaitNeighbors, Work
 from ..core.sharing import Group
 from ..core.table2 import KernelSpec
+from ..obs import trace
 from .results import (BatchPrediction, PlacedBatchPrediction, Prediction,
                       Sensitivities, SimulationResult,
                       from_share_prediction, from_topology_prediction)
@@ -255,12 +256,14 @@ class ScalarPlan(Plan):
         (scalar or length-G sequence).  ``backend`` is accepted for
         signature uniformity — the scalar path *is* the reference
         implementation and always runs it."""
-        groups = self.groups if cores is None and f is None and b_s is None \
-            else _swap_groups(self.groups, cores, f, b_s)
-        pred = sharing.predict(groups, **self.solver_options)
-        return from_share_prediction(pred, arch=self.arch,
-                                     provenance=self.provenance,
-                                     engine="scalar")
+        with trace.span("api.plan.run", kind=self.kind, engine="scalar"):
+            groups = self.groups \
+                if cores is None and f is None and b_s is None \
+                else _swap_groups(self.groups, cores, f, b_s)
+            pred = sharing.predict(groups, **self.solver_options)
+            return from_share_prediction(pred, arch=self.arch,
+                                         provenance=self.provenance,
+                                         engine="scalar")
 
     def grad(self, *, wrt=("f", "b_s"), softmin_beta=None) -> Prediction:
         """Solve and differentiate: jacobians ``∂bw_i/∂wrt_j`` of shape
@@ -297,23 +300,25 @@ class PlacedPlan(Plan):
 
     def run(self, *, cores=None, f=None, b_s=None, backend=None,
             jax_cutoff=None, chunk=None) -> Prediction:
-        placements = self.placements
-        if cores is not None or f is not None or b_s is not None:
-            groups = _swap_groups(
-                tuple(p.group for p in placements), cores, f, b_s)
-            placements = tuple(
-                topology_mod.Placed(g, p.domain)
-                for g, p in zip(groups, placements))
-        kwargs = dict(self.solver_kwargs)
-        if backend is not None:
-            kwargs["backend"] = backend
-        if jax_cutoff is not None:
-            kwargs["jax_cutoff"] = jax_cutoff
-        if chunk is not None:
-            kwargs["chunk"] = chunk
-        pred = topology_mod.predict_placed(self.topo, placements, **kwargs)
-        return from_topology_prediction(pred, arch=self.arch,
-                                        provenance=self.provenance)
+        with trace.span("api.plan.run", kind=self.kind, engine="topology"):
+            placements = self.placements
+            if cores is not None or f is not None or b_s is not None:
+                groups = _swap_groups(
+                    tuple(p.group for p in placements), cores, f, b_s)
+                placements = tuple(
+                    topology_mod.Placed(g, p.domain)
+                    for g, p in zip(groups, placements))
+            kwargs = dict(self.solver_kwargs)
+            if backend is not None:
+                kwargs["backend"] = backend
+            if jax_cutoff is not None:
+                kwargs["jax_cutoff"] = jax_cutoff
+            if chunk is not None:
+                kwargs["chunk"] = chunk
+            pred = topology_mod.predict_placed(self.topo, placements,
+                                               **kwargs)
+            return from_topology_prediction(pred, arch=self.arch,
+                                            provenance=self.provenance)
 
     def grad(self, *, wrt=("f", "b_s"), softmin_beta=None) -> Prediction:
         """Solve and differentiate the placed scenario: jacobians of
@@ -390,25 +395,27 @@ class BatchPlan(Plan):
         ``jax_cutoff`` / ``chunk`` re-resolve dispatch for this run
         only.  Equal to a fresh ``compile(...).run()`` of the modified
         scenarios, bit for bit."""
-        n_arr = _swap_array(self.n, cores, "cores")
-        f_arr = _swap_array(self.f, f, "f")
-        bs_arr = _swap_array(self.bs, b_s, "b_s")
-        if backend is None and jax_cutoff is None:
-            resolved = self.backend
-        else:
-            resolved = backend_mod.resolve(
-                backend or self.requested_backend, len(self),
-                jax_cutoff=jax_cutoff if jax_cutoff is not None
-                else self.jax_cutoff)
-        b, alphas, util, bw = sharing.solve_arrays(
-            n_arr, f_arr, bs_arr, backend=resolved,
-            chunk=chunk if chunk is not None else self.chunk,
-            **self.solver_options)
-        raw = sharing.BatchSharePrediction(
-            n=n_arr, f=f_arr, bs=bs_arr, b_overlap=b, alphas=alphas,
-            util=util, bw_group=bw, names=self.names)
-        return BatchPrediction(archs=self.archs, engine=resolved, raw=raw,
-                               provenance=self.provenance)
+        with trace.span("api.plan.run", kind=self.kind, B=len(self)) as sp:
+            n_arr = _swap_array(self.n, cores, "cores")
+            f_arr = _swap_array(self.f, f, "f")
+            bs_arr = _swap_array(self.bs, b_s, "b_s")
+            if backend is None and jax_cutoff is None:
+                resolved = self.backend
+            else:
+                resolved = backend_mod.resolve(
+                    backend or self.requested_backend, len(self),
+                    jax_cutoff=jax_cutoff if jax_cutoff is not None
+                    else self.jax_cutoff)
+            sp.set(engine=resolved)
+            b, alphas, util, bw = sharing.solve_arrays(
+                n_arr, f_arr, bs_arr, backend=resolved,
+                chunk=chunk if chunk is not None else self.chunk,
+                **self.solver_options)
+            raw = sharing.BatchSharePrediction(
+                n=n_arr, f=f_arr, bs=bs_arr, b_overlap=b, alphas=alphas,
+                util=util, bw_group=bw, names=self.names)
+            return BatchPrediction(archs=self.archs, engine=resolved,
+                                   raw=raw, provenance=self.provenance)
 
     def grad(self, *, wrt=("f", "b_s"), softmin_beta=None
              ) -> BatchPrediction:
@@ -490,6 +497,13 @@ class PlacedBatchPlan(Plan):
         ``backend``/``jax_cutoff``/``chunk`` re-resolve dispatch for
         this run only.
         """
+        with trace.span("api.plan.run", kind=self.kind,
+                        B=len(self)) as sp:
+            return self._run_traced(sp, cores, f, b_s, placement, backend,
+                                    jax_cutoff, chunk)
+
+    def _run_traced(self, sp, cores, f, b_s, placement, backend,
+                    jax_cutoff, chunk) -> PlacedBatchPrediction:
         grid = self.grid
         if placement is not None:
             placement = [tuple(p) for p in placement]
@@ -497,12 +511,14 @@ class PlacedBatchPlan(Plan):
                 raise ValueError(
                     f"placement gives {len(placement)} scenarios for the "
                     f"plan's {len(self)}")
-            grid = topology_mod.pack_placed(self.topo, placement,
-                                            strict=self.strict)
+            with trace.span("api.plan.pack"):
+                grid = topology_mod.pack_placed(self.topo, placement,
+                                                strict=self.strict)
         n_arr = _swap_array(grid.n, cores, "cores")
         f_arr = _swap_array(grid.f, f, "f")
         bs_arr = _swap_array(grid.bs, b_s, "b_s")
         resolved = self._dispatch(backend, jax_cutoff)
+        sp.set(engine=resolved)
         shares = sharing.solve_placed_batch(
             n_arr, f_arr, bs_arr, mask=grid.mask, backend=resolved,
             chunk=chunk if chunk is not None else self.chunk,
@@ -577,36 +593,39 @@ class SimulatePlan(Plan):
         ``(f, b_s)`` numbers by name (a :class:`KernelSpec`, an
         ``(f, bs)`` pair, or a calibration mapping — anything the
         registry resolves) without re-encoding the programs."""
-        if t_max is None:
-            if self.t_max_conflict is not None:
-                i, t_i, t_0 = self.t_max_conflict
-                raise ValueError(
-                    f"scenario {i} sets t_max={t_i} but scenario 0 "
-                    f"sets {t_0}; a batch runs on one clock horizon "
-                    f"(or pass t_max= to simulate() explicitly)")
-            t_max = self.t_max_default
-        merged = self.specs
-        if specs:
-            from .registry import resolve as registry_resolve
-            from .registry import unknown_key_error
-            merged = dict(self.specs)
-            for name, ref in specs.items():
-                if name not in merged:
-                    # A typo'd kernel name would otherwise make the
-                    # swap a silent no-op.
-                    raise unknown_key_error("kernel", name,
-                                            sorted(merged))
-                merged[name] = registry_resolve(
-                    ref, arch=self.arch, name=name).spec
-        resolved = backend_mod.resolve(
-            backend or self.requested_backend, self.n_members,
-            prefer="numpy")
-        res = desync_batch.run_encoded(
-            self.enc, self.arch, merged, placement=self.placement,
-            t_max=t_max, backend=resolved, on_deadlock=on_deadlock)
-        return SimulationResult(arch=self.arch,
-                                engine=f"desync-{resolved}", raw=res,
-                                members=self.members)
+        with trace.span("api.plan.run", kind=self.kind,
+                        B=self.n_members) as sp:
+            if t_max is None:
+                if self.t_max_conflict is not None:
+                    i, t_i, t_0 = self.t_max_conflict
+                    raise ValueError(
+                        f"scenario {i} sets t_max={t_i} but scenario 0 "
+                        f"sets {t_0}; a batch runs on one clock horizon "
+                        f"(or pass t_max= to simulate() explicitly)")
+                t_max = self.t_max_default
+            merged = self.specs
+            if specs:
+                from .registry import resolve as registry_resolve
+                from .registry import unknown_key_error
+                merged = dict(self.specs)
+                for name, ref in specs.items():
+                    if name not in merged:
+                        # A typo'd kernel name would otherwise make the
+                        # swap a silent no-op.
+                        raise unknown_key_error("kernel", name,
+                                                sorted(merged))
+                    merged[name] = registry_resolve(
+                        ref, arch=self.arch, name=name).spec
+            resolved = backend_mod.resolve(
+                backend or self.requested_backend, self.n_members,
+                prefer="numpy")
+            sp.set(engine=f"desync-{resolved}")
+            res = desync_batch.run_encoded(
+                self.enc, self.arch, merged, placement=self.placement,
+                t_max=t_max, backend=resolved, on_deadlock=on_deadlock)
+            return SimulationResult(arch=self.arch,
+                                    engine=f"desync-{resolved}", raw=res,
+                                    members=self.members)
 
     def grad(self, *, wrt=("f", "b_s"), softmin_beta=None):
         """Simulations are not reverse-differentiable: the event loop
@@ -629,11 +648,13 @@ class SimulatePlan(Plan):
 
 def _compile_predict(scenario) -> Plan:
     if isinstance(scenario, ScenarioBatch):
-        scenario.predictable  # cached O(B) validation; raises on misuse
+        with trace.span("api.compile.validate"):
+            scenario.predictable  # cached O(B) validation; raises on misuse
         first = scenario.scenarios[0]
         if scenario.is_placed:
-            grid = topology_mod.pack_placed(
-                first.topo, scenario.placements, strict=first.strict)
+            with trace.span("api.compile.pack", B=len(scenario)):
+                grid = topology_mod.pack_placed(
+                    first.topo, scenario.placements, strict=first.strict)
             B, D, _ = grid.n.shape
             resolved = backend_mod.resolve(first.backend, B * D,
                                            jax_cutoff=first.jax_cutoff)
@@ -644,7 +665,8 @@ def _compile_predict(scenario) -> Plan:
                 backend=resolved, requested_backend=first.backend,
                 strict=first.strict, jax_cutoff=first.jax_cutoff,
                 chunk=first.chunk)
-        n, f, bs, names = scenario.arrays
+        with trace.span("api.compile.pack", B=len(scenario)):
+            n, f, bs, names = scenario.arrays
         resolved = backend_mod.resolve(first.backend, len(scenario),
                                        jax_cutoff=first.jax_cutoff)
         return BatchPlan(archs=scenario.archs, n=n, f=f, bs=bs,
@@ -759,11 +781,13 @@ def _compile_simulate(scenario, *,
     # The engine-side contract (rectangularity, placement length,
     # domain existence, anonymous-domain default) — shared with
     # run_batch so the two entry paths cannot drift.
-    placement = desync_batch.validate_batch(programs_batch, topo,
-                                            placement0)
+    with trace.span("api.compile.validate", members=len(members)):
+        placement = desync_batch.validate_batch(programs_batch, topo,
+                                                placement0)
 
     specs = _collect_specs(scenarios)
-    enc = desync_batch._encode(programs_batch, specs)
+    with trace.span("api.compile.encode", members=len(members)):
+        enc = desync_batch._encode(programs_batch, specs)
     return SimulatePlan(arch=first.arch, enc=enc, specs=specs,
                         placement=placement, t_max_default=first.t_max,
                         t_max_conflict=t_max_conflict,
@@ -804,9 +828,14 @@ def compile(scenario: Scenario | ScenarioBatch, *,
             is_program = isinstance(scenario, Scenario) and (
                 bool(scenario.steps) or scenario.noise is not None)
         verb = "simulate" if is_program else "predict"
-    if verb == "predict":
-        return _compile_predict(scenario)
-    if verb == "simulate":
-        return _compile_simulate(scenario, fuse_ensembles=fuse_ensembles)
-    raise ValueError(
-        f"unknown verb {verb!r}; expected 'predict' or 'simulate'")
+    if verb not in ("predict", "simulate"):
+        raise ValueError(
+            f"unknown verb {verb!r}; expected 'predict' or 'simulate'")
+    with trace.span("api.compile", verb=verb) as sp:
+        if verb == "predict":
+            plan = _compile_predict(scenario)
+        else:
+            plan = _compile_simulate(scenario,
+                                     fuse_ensembles=fuse_ensembles)
+        sp.set(kind=plan.kind, engine=plan.engine)
+        return plan

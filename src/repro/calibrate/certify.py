@@ -32,6 +32,7 @@ import numpy as np
 
 from ..api import ResolvedSpec, Scenario, ScenarioBatch
 from ..api import predict as api_predict
+from ..obs import log as obs_log
 from ..core.table2 import ARCHS, TABLE2, KernelSpec
 from .fit import (aggregate_ensemble, calibrated_specs, fit_scaling,
                   fit_scaling_cell)
@@ -287,17 +288,35 @@ def main(argv: Sequence[str] | None = None) -> int:
               else certify(backend=args.backend))
     with open(args.out, "w") as fh:
         json.dump(report.to_json_dict(), fh, indent=2)
-    print(f"cells={len(report.cells)}  traces={report.n_traces}  "
-          f"backend={report.backend}")
-    print(f"max err: f {report.max_f_err:.2%}  bs {report.max_bs_err:.2%}"
-          f"  pairs {report.max_pair_err:.2%}  (bound {ERROR_BOUND:.0%})")
-    print(f"batched fit {report.wall_batched_s * 1e3:.1f} ms vs "
-          f"sequential per-cell {report.wall_sequential_s * 1e3:.1f} ms "
-          f"->  {report.speedup:.1f}x")
+    obs_log.emit(f"cells={len(report.cells)}  traces={report.n_traces}  "
+                 f"backend={report.backend}",
+                 event="calibrate.certify.grid",
+                 cells=len(report.cells), traces=report.n_traces,
+                 backend=report.backend)
+    obs_log.emit(f"max err: f {report.max_f_err:.2%}  "
+                 f"bs {report.max_bs_err:.2%}"
+                 f"  pairs {report.max_pair_err:.2%}  "
+                 f"(bound {ERROR_BOUND:.0%})",
+                 event="calibrate.certify.errors",
+                 max_f_err=report.max_f_err, max_bs_err=report.max_bs_err,
+                 max_pair_err=report.max_pair_err, bound=ERROR_BOUND)
+    obs_log.emit(f"batched fit {report.wall_batched_s * 1e3:.1f} ms vs "
+                 f"sequential per-cell "
+                 f"{report.wall_sequential_s * 1e3:.1f} ms "
+                 f"->  {report.speedup:.1f}x",
+                 event="calibrate.certify.timing",
+                 wall_batched_s=report.wall_batched_s,
+                 wall_sequential_s=report.wall_sequential_s,
+                 speedup=report.speedup)
     for c in report.worst_cells(3):
-        print(f"  worst cell: {c.kernel}/{c.arch}  f {c.f_err:.2%}  "
-              f"bs {c.bs_err:.2%}")
-    print(f"wrote {args.out}  (ok={report.ok()})")
+        obs_log.emit(f"  worst cell: {c.kernel}/{c.arch}  f {c.f_err:.2%}  "
+                     f"bs {c.bs_err:.2%}",
+                     event="calibrate.certify.worst_cell",
+                     kernel=c.kernel, arch=c.arch,
+                     f_err=c.f_err, bs_err=c.bs_err)
+    obs_log.emit(f"wrote {args.out}  (ok={report.ok()})",
+                 event="calibrate.certify.artifact",
+                 path=args.out, ok=report.ok())
     return 0 if report.ok() else 1
 
 

@@ -46,6 +46,8 @@ from ..core.backend import HAVE_JAX
 from ..core.sharing import (UTILIZATION_MODES, solve_batch,
                             utilization_curve, utilization_curve_grad)
 from ..core.table2 import TABLE2, KernelSpec
+from ..obs import metrics
+from ..obs import trace as trace_mod
 from .traces import PairTrace, ScalingTrace, TraceSet
 
 #: Default candidate grid: log-spaced so relative resolution is uniform
@@ -504,16 +506,31 @@ def fit_scaling(traces: TraceSet | Sequence[ScalingTrace], *,
     n, y, mask, tr = traces.to_arrays()
     backend = backend_mod.resolve(backend, n.shape[0],
                                   jax_cutoff=jax_cutoff)
-    if backend == "jax":
-        f_hat, bs_hat, rss, f_sig, bs_sig = _fit_cells_jax(
-            n, y, mask, f_grid, utilization, p0_factor, refine)
-    else:
-        f_hat, bs_hat, rss, f_sig, bs_sig = _fit_cells_np(
-            n, y, mask, f_grid, utilization, p0_factor, refine)
+    with trace_mod.span("calibrate.fit", cells=int(n.shape[0]),
+                        backend=backend, utilization=utilization,
+                        refine=refine) as sp:
+        if backend == "jax":
+            f_hat, bs_hat, rss, f_sig, bs_sig = _fit_cells_jax(
+                n, y, mask, f_grid, utilization, p0_factor, refine)
+        else:
+            f_hat, bs_hat, rss, f_sig, bs_sig = _fit_cells_np(
+                n, y, mask, f_grid, utilization, p0_factor, refine)
+        n_evals = _refine_evals(refine, len(f_grid))
+        if trace_mod.enabled():
+            # Per-cell evals and convergence: rss is the converged
+            # residual sum of squares of each (kernel, arch, seed) cell.
+            sp.set(evals_per_cell=n_evals,
+                   rss_max=float(rss.max()) if rss.size else 0.0,
+                   rss_median=float(np.median(rss)) if rss.size else 0.0)
+            metrics.counter("calibrate.fit.cells").inc(int(n.shape[0]))
+            metrics.counter("calibrate.fit.evals").inc(
+                n_evals * int(n.shape[0]))
+            for r in rss:
+                metrics.histogram("calibrate.fit.rss").observe(float(r))
     return ScalingFit(f=f_hat, bs=bs_hat, rss=rss, traces=tuple(tr),
                       utilization=utilization, backend=backend,
                       f_sigma=f_sig, bs_sigma=bs_sig, refine=refine,
-                      n_evals=_refine_evals(refine, len(f_grid)))
+                      n_evals=n_evals)
 
 
 def fit_scaling_cell(trace: ScalingTrace, **kwargs) -> tuple[float, float]:

@@ -36,9 +36,12 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from typing import Callable, Sequence
 
 import numpy as np
+
+from ..obs import metrics, trace
 
 try:  # The jax paths are optional: numpy covers hermetic containers.
     import jax  # noqa: F401  (re-exported capability, used by clients)
@@ -154,7 +157,19 @@ def resolve(backend: str, batch_size: int | None = None, *,
 
 _JIT_CACHE: dict[tuple, Callable] = {}
 _JIT_LOCK = threading.Lock()
-_STATS = {"hits": 0, "misses": 0}
+
+# Hit/miss/compile-time accounting lives on the process-wide metrics
+# registry (repro.obs.metrics) — this module's former private ``_STATS``
+# dict, now visible to every exporter.  One labeled instrument per cache
+# key gives :func:`cache_stats` its per-bucket breakdown.
+_HIT_METRIC = "backend.jit.hit"
+_MISS_METRIC = "backend.jit.miss"
+_COMPILE_METRIC = "backend.jit.compile_s"
+
+
+def _key_label(key: tuple) -> str:
+    """Cache key -> flat metric label (``sharing.solve_batch/jax/256``)."""
+    return "/".join(str(part) for part in key)
 
 
 def bucket(n: int, *, minimum: int = 1) -> int:
@@ -177,40 +192,70 @@ def jitted(key: tuple, build: Callable[[], Callable]) -> Callable:
     key return the cached callable, preserving jax's own
     per-callable compilation cache across calls, call sites, and
     plans."""
+    label = _key_label(key)
     with _JIT_LOCK:
         fn = _JIT_CACHE.get(key)
-        if fn is not None:
-            _STATS["hits"] += 1
-            return fn
+    if fn is not None:
+        metrics.counter(_HIT_METRIC, key=label).inc()
+        return fn
     # Build outside the lock (compilation can be slow); a racing
     # duplicate build is harmless — setdefault keeps the first
     # insertion and discards the loser, and both callables compute
     # the same thing.
-    fn = build()
+    with trace.span("backend.jit.build", key=label):
+        t0 = time.perf_counter()
+        fn = build()
+        dt = time.perf_counter() - t0
+    metrics.counter(_MISS_METRIC, key=label).inc()
+    metrics.histogram(_COMPILE_METRIC, key=label).observe(dt)
     with _JIT_LOCK:
-        _STATS["misses"] += 1
         _JIT_CACHE.setdefault(key, fn)
         return _JIT_CACHE[key]
 
 
 def cache_stats() -> dict:
-    """Hit/miss counters and entry count of the jitted-solver cache."""
+    """Hit/miss counters and entry count of the jitted-solver cache,
+    plus a per-bucket breakdown: ``"buckets"`` maps each cache-key label
+    to its ``{"hits", "misses", "compile_s"}`` (compile wall time summed
+    over rebuilds of that key)."""
+    buckets: dict[str, dict] = {}
+
+    def _bucket(label: str) -> dict:
+        return buckets.setdefault(
+            label, {"hits": 0, "misses": 0, "compile_s": 0.0})
+
+    hits = misses = 0
+    for row in metrics.snapshot():
+        label = row["labels"].get("key")
+        if label is None:
+            continue
+        if row["name"] == _HIT_METRIC:
+            _bucket(label)["hits"] = row["value"]
+            hits += row["value"]
+        elif row["name"] == _MISS_METRIC:
+            _bucket(label)["misses"] = row["value"]
+            misses += row["value"]
+        elif row["name"] == _COMPILE_METRIC:
+            _bucket(label)["compile_s"] = row["sum"]
     with _JIT_LOCK:
-        total = _STATS["hits"] + _STATS["misses"]
-        return {
-            "hits": _STATS["hits"],
-            "misses": _STATS["misses"],
-            "entries": len(_JIT_CACHE),
-            "hit_rate": (_STATS["hits"] / total) if total else 0.0,
-        }
+        entries = len(_JIT_CACHE)
+    total = hits + misses
+    return {
+        "hits": hits,
+        "misses": misses,
+        "entries": entries,
+        "hit_rate": (hits / total) if total else 0.0,
+        "buckets": buckets,
+    }
 
 
 def clear_jit_cache() -> None:
-    """Drop every cached callable and reset the counters (tests)."""
+    """Drop every cached callable and reset the **whole** metrics
+    registry (not just the jit counters), so tests cannot leak counts
+    across cases."""
     with _JIT_LOCK:
         _JIT_CACHE.clear()
-        _STATS["hits"] = 0
-        _STATS["misses"] = 0
+    metrics.reset()
 
 
 def pad_rows(arr: np.ndarray, rows: int) -> np.ndarray:

@@ -45,6 +45,7 @@ from .desync import (EPS, Allreduce, Idle, Item, Record, WaitNeighbors,
 from .sharing import solve_batch
 from .table2 import TABLE2, KernelSpec
 from .topology import Topology
+from ..obs import metrics, trace
 
 _WORK, _ALLREDUCE, _WAITNB, _IDLE, _PAD = 0, 1, 2, 3, -1
 
@@ -290,9 +291,19 @@ def run_encoded(enc: _Encoded, arch: str,
     resolved = backend_mod.resolve(backend, enc.kind.shape[0],
                                    prefer="numpy")
     placement = tuple(placement)
-    if resolved == "numpy":
-        return _run_numpy(enc, arch, specs, placement, t_max, on_deadlock)
-    return _run_jax(enc, arch, specs, placement, t_max, on_deadlock)
+    engine = _run_numpy if resolved == "numpy" else _run_jax
+    if not trace.enabled():  # hot path: no span bookkeeping
+        return engine(enc, arch, specs, placement, t_max, on_deadlock)
+    B, R, L = enc.kind.shape
+    with trace.span("desync.run", backend=resolved, B=B, R=R, L=L) as sp:
+        result = engine(enc, arch, specs, placement, t_max, on_deadlock)
+        deadlocked = int(result.failed.sum())
+        sp.set(n_steps=result.n_steps, deadlocked=deadlocked)
+        metrics.counter("desync.steps").inc(result.n_steps)
+        metrics.counter("desync.runs").inc()
+        if deadlocked:
+            metrics.counter("desync.deadlocked_scenarios").inc(deadlocked)
+        return result
 
 
 # --------------------------------------------------------------------------
@@ -336,6 +347,7 @@ def _run_numpy(enc: _Encoded, arch: str, specs, placement, t_max: float,
     end_arr = np.full((B, R, L), np.nan)
     records: list[list[Record]] = [[] for _ in range(B)]
     n_steps = 0
+    trace_on = trace.enabled()  # latched: per-step probes check one bool
 
     def cur(arr):
         return np.take_along_axis(
@@ -412,6 +424,11 @@ def _run_numpy(enc: _Encoded, arch: str, specs, placement, t_max: float,
 
         # -- one Eq. 4–5 solve across every populated (scenario, domain)
         working = (ck == _WORK) & prog[:, None]
+        if trace_on:
+            metrics.histogram("desync.step.active_scenarios").observe(
+                float(prog.sum()))
+            metrics.histogram("desync.step.working_ranks").observe(
+                float(working.sum()))
         rate = np.zeros((B, R))
         if working.any():
             kern_c = cur(enc.kern)

@@ -38,6 +38,7 @@ import numpy as np
 from . import backend as backend_mod
 from .backend import HAVE_JAX  # re-export: the probe lives on the substrate
 from .table2 import KernelSpec
+from ..obs import metrics, trace
 
 if HAVE_JAX:  # pragma: no branch - capability guard, not dispatch
     import jax
@@ -195,7 +196,15 @@ def _fixedpoint_u_np(n, f, p0_factor):
         below = r < 0
         lo = np.where(below, mid, lo)
         hi = np.where(below, hi, mid)
-    return 0.5 * (lo + hi)
+    u = 0.5 * (lo + hi)
+    if trace.enabled() and u.size:
+        # Diagnostics only — one extra S(u) evaluation, never on the
+        # untraced path, and the returned u is untouched either way.
+        resid = np.max(np.abs(u - np.minimum(1.0, n * f / (1.0 + c * u))))
+        metrics.counter("sharing.fp.solves").inc()
+        metrics.counter("sharing.fp.bisect_iters").inc(_FP_BISECT_ITERS)
+        metrics.histogram("sharing.fp.residual").observe(float(resid))
+    return u
 
 
 def utilization_curve(n, f, *, mode: str = "recursion",
@@ -607,10 +616,21 @@ def solve_arrays(n: np.ndarray, f: np.ndarray, bs: np.ndarray, *,
     kwargs = dict(utilization=utilization, p0_factor=p0_factor,
                   saturated=saturated)
     eff_chunk = backend_mod.default_chunk(chunk)
-    if eff_chunk is not None and n.shape[0] > eff_chunk:
-        return backend_mod.run_chunked(
-            lambda *arrs: solve(*arrs, **kwargs), (n, f, bs), eff_chunk)
-    return solve(n, f, bs, **kwargs)
+    chunked = eff_chunk is not None and n.shape[0] > eff_chunk
+
+    def dispatch():
+        if chunked:
+            return backend_mod.run_chunked(
+                lambda *arrs: solve(*arrs, **kwargs), (n, f, bs), eff_chunk)
+        return solve(n, f, bs, **kwargs)
+
+    if not trace.enabled():  # hot path: no attr dicts, no span object
+        return dispatch()
+    with trace.span("sharing.solve_arrays", backend=backend,
+                    B=int(n.shape[0]), G=int(n.shape[1]),
+                    utilization=str(utilization),
+                    chunk=eff_chunk if chunked else None):
+        return dispatch()
 
 
 def resolve_backend(backend: str, batch_size: int | None = None, *,
@@ -745,12 +765,14 @@ def solve_arrays_and_grad(n, f, bs, *, wrt=("f", "b_s"),
     solver = backend_mod.jitted(
         ("sharing.grad", mode, beta, argnums, Bb, G, n_max_b),
         lambda: _build_jax_grad_solver(mode, n_max_b, beta, argnums))
-    with jax.experimental.enable_x64():
-        jacs = solver(
-            jnp.asarray(backend_mod.pad_rows(n, Bb), jnp.float64),
-            jnp.asarray(backend_mod.pad_rows(f, Bb), jnp.float64),
-            jnp.asarray(backend_mod.pad_rows(bs, Bb), jnp.float64),
-            jnp.float64(aux))
+    with trace.span("sharing.solve_grad", wrt=",".join(wrt), B=B, G=G,
+                    mode=mode):
+        with jax.experimental.enable_x64():
+            jacs = solver(
+                jnp.asarray(backend_mod.pad_rows(n, Bb), jnp.float64),
+                jnp.asarray(backend_mod.pad_rows(f, Bb), jnp.float64),
+                jnp.asarray(backend_mod.pad_rows(bs, Bb), jnp.float64),
+                jnp.float64(aux))
     grads = {name: np.asarray(j)[:B]
              for name, j in zip(wrt, jacs)}
     return forward, grads
@@ -848,10 +870,11 @@ def solve_placed_batch(n, f, bs, *, mask=None, names=None,
     f = np.where(mask, f, zero)
     bs = np.where(mask, bs, zero)
     B, D, K = n.shape
-    b, alphas, util, bw = solve_arrays(
-        n.reshape(B * D, K), f.reshape(B * D, K), bs.reshape(B * D, K),
-        backend=backend, utilization=utilization, p0_factor=p0_factor,
-        saturated=saturated, jax_cutoff=jax_cutoff, chunk=chunk)
+    with trace.span("sharing.solve_placed_batch", B=B, D=D, K=K):
+        b, alphas, util, bw = solve_arrays(
+            n.reshape(B * D, K), f.reshape(B * D, K), bs.reshape(B * D, K),
+            backend=backend, utilization=utilization, p0_factor=p0_factor,
+            saturated=saturated, jax_cutoff=jax_cutoff, chunk=chunk)
     return PlacedBatchSharePrediction(
         n=n, f=f, bs=bs, mask=mask,
         b_overlap=b.reshape(B, D), alphas=alphas.reshape(B, D, K),

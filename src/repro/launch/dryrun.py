@@ -37,6 +37,7 @@ from repro.optim import cosine_schedule        # noqa: E402
 from repro.runtime import sharding as shard_rules  # noqa: E402
 from repro.runtime import steps as steps_lib   # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.obs import log as obs_log               # noqa: E402
 
 
 def cell_should_run(cfg, shape) -> tuple[bool, str]:
@@ -212,7 +213,9 @@ def run_cell(arch, shape_name, mesh_name, out_path, *, microbatches=1,
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                "status": "skipped", "reason": reason, "variant": variant}
         _append(out_path, rec)
-        print(f"SKIP {arch}/{shape_name}/{mesh_name}: {reason}")
+        obs_log.emit(f"SKIP {arch}/{shape_name}/{mesh_name}: {reason}",
+                     event="launch.dryrun.skip", arch=arch,
+                     shape=shape_name, mesh=mesh_name, reason=reason)
         return rec
     multi = mesh_name == "multi"
     mesh = make_production_mesh(multi_pod=multi)
@@ -238,20 +241,28 @@ def run_cell(arch, shape_name, mesh_name, out_path, *, microbatches=1,
         rec["variant"] = variant
         rec["options"] = {"microbatches": microbatches, "dp_only": dp_only,
                           "fsdp": fsdp, "cfg_over": cfg_over or {}}
-        print(f"OK   {arch}/{shape_name}/{mesh_name}[{variant}]: "
-              f"dominant={rec['dominant']} "
-              f"roofline={rec['roofline_fraction']:.3f} "
-              f"t=({rec['t_compute_s']:.3f},{rec['t_memory_s']:.3f},"
-              f"{rec['t_collective_s']:.3f})s "
-              f"mem/dev={rec['bytes_per_device_est']/2**30:.2f}GiB "
-              f"({rec['compile_s']}s)")
+        obs_log.emit(
+            f"OK   {arch}/{shape_name}/{mesh_name}[{variant}]: "
+            f"dominant={rec['dominant']} "
+            f"roofline={rec['roofline_fraction']:.3f} "
+            f"t=({rec['t_compute_s']:.3f},{rec['t_memory_s']:.3f},"
+            f"{rec['t_collective_s']:.3f})s "
+            f"mem/dev={rec['bytes_per_device_est']/2**30:.2f}GiB "
+            f"({rec['compile_s']}s)",
+            event="launch.dryrun.ok", arch=arch, shape=shape_name,
+            mesh=mesh_name, variant=variant, dominant=rec["dominant"],
+            roofline_fraction=rec["roofline_fraction"],
+            compile_s=rec["compile_s"])
     except Exception as e:  # noqa: BLE001 — record the failure and move on
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                "status": "error", "error": f"{type(e).__name__}: {e}",
                "variant": variant,
                "traceback": traceback.format_exc()[-2000:]}
-        print(f"FAIL {arch}/{shape_name}/{mesh_name}: {type(e).__name__}: "
-              f"{e}", file=sys.stderr)
+        obs_log.emit(f"FAIL {arch}/{shape_name}/{mesh_name}: "
+                     f"{type(e).__name__}: {e}", stream=sys.stderr,
+                     event="launch.dryrun.fail", arch=arch,
+                     shape=shape_name, mesh=mesh_name,
+                     error=f"{type(e).__name__}: {e}")
     _append(out_path, rec)
     return rec
 
@@ -312,7 +323,9 @@ def main():
     done = _done_cells(args.out) if args.variant == "baseline" else set()
     for arch, shape, mesh_name in cells:
         if (arch, shape, mesh_name) in done:
-            print(f"SKIP (done) {arch}/{shape}/{mesh_name}")
+            obs_log.emit(f"SKIP (done) {arch}/{shape}/{mesh_name}",
+                         event="launch.dryrun.skip", arch=arch,
+                         shape=shape, mesh=mesh_name, reason="done")
             continue
         run_cell(arch, shape, mesh_name, args.out,
                  microbatches=args.microbatches, dp_only=args.dp_only,

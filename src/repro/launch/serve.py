@@ -16,6 +16,7 @@ from repro import configs
 from repro.models import model_for
 from repro.runtime import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
+from repro.obs import log as obs_log
 
 
 def main():
@@ -53,9 +54,13 @@ def main():
     jax.block_until_ready(tokens)
     dt = (time.time() - t0) / args.steps
     toks = jnp.stack(generated, axis=1)
-    print(f"decoded {args.steps} tokens x {args.batch} seqs "
-          f"({dt*1e3:.1f} ms/token)")
-    print("sample:", toks[0][:16].tolist())
+    obs_log.emit(f"decoded {args.steps} tokens x {args.batch} seqs "
+                 f"({dt*1e3:.1f} ms/token)",
+                 event="launch.serve.decoded", steps=args.steps,
+                 batch=args.batch, ms_per_token=dt * 1e3)
+    obs_log.emit(f"sample: {toks[0][:16].tolist()}",
+                 event="launch.serve.sample",
+                 tokens=toks[0][:16].tolist())
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from repro.optim import cosine_schedule
 from repro.runtime import loop as loop_lib
 from repro.runtime import steps as steps_lib
 from repro.launch.mesh import make_host_mesh
+from repro.obs import log as obs_log
 
 
 def main():
@@ -67,7 +68,8 @@ def main():
         restored, manifest = ckpt.restore_latest(state)
         if restored is not None:
             state, start = restored, int(manifest["step"])
-            print(f"restored from step {start}")
+            obs_log.emit(f"restored from step {start}",
+                         event="launch.train.restore", step=start)
 
     from repro.data import HostLoader
     loader = HostLoader(dataset, start_step=start)
@@ -83,15 +85,19 @@ def main():
             step += 1
             if step % args.log_every == 0:
                 dt = (time.time() - t0) / (step - start)
-                print(f"step {step}: loss={losses[-1]:.4f} "
-                      f"({dt*1e3:.0f} ms/step)")
+                obs_log.emit(f"step {step}: loss={losses[-1]:.4f} "
+                             f"({dt*1e3:.0f} ms/step)",
+                             event="launch.train.step", step=step,
+                             loss=losses[-1], ms_per_step=dt * 1e3)
             if ckpt and step % args.ckpt_every == 0:
                 ckpt.save_async(step, state, extra={"loss": losses[-1]})
         if ckpt:
             ckpt.save_async(step, state, extra={"final": True})
             ckpt.wait()
-        print(f"done: step={step} first_loss={losses[0]:.4f} "
-              f"last_loss={losses[-1]:.4f}")
+        obs_log.emit(f"done: step={step} first_loss={losses[0]:.4f} "
+                     f"last_loss={losses[-1]:.4f}",
+                     event="launch.train.done", step=step,
+                     first_loss=losses[0], last_loss=losses[-1])
     finally:
         loader.close()
 

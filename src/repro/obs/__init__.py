@@ -1,0 +1,43 @@
+"""Unified instrumentation: spans, metrics, and trace export.
+
+The repo's runtime signals used to be scattered — backend cache
+counters, solver iteration counts, raw ``print()`` reporting — with no
+way to see where a ``plan.run()`` or ``calibrate.fit`` spends its time.
+This package is the one substrate they all share:
+
+* :mod:`~repro.obs.trace` — nestable spans (context manager /
+  decorator) over a thread-safe ring buffer; near-zero cost while
+  disabled, enabled via ``REPRO_TRACE=1`` or :func:`trace.enable`.
+* :mod:`~repro.obs.metrics` — named counters / gauges / histograms on
+  a process-wide registry (supersedes ``core.backend``'s private
+  ``_STATS`` dict).
+* :mod:`~repro.obs.export` — ndjson event stream + Chrome
+  ``trace_event`` JSON for ``chrome://tracing`` / Perfetto; written
+  automatically at exit under ``REPRO_TRACE=1``.
+* :mod:`~repro.obs.log` — structured stdout reporter (text unchanged,
+  events under tracing).
+* :mod:`~repro.obs.report` — ``python -m repro.obs.report`` summary
+  CLI over an exported ndjson file.
+
+Probes are wired through every hot layer (backend jit cache, the
+Eq. 4-5 solvers, the desync event loop, Gauss-Newton calibration,
+pod-plan relaxation, plan compile/run), so one traced run of any
+benchmark or example emits a complete correlated timeline.  Span and
+metric names follow ``layer.noun.verb`` — the full catalog lives in
+docs/observability.md.
+
+Instrumentation never changes results: with tracing disabled every
+probed function is bit-for-bit its un-instrumented self
+(tests/test_obs.py), and the measured overhead is gated by
+benchmarks/obs_overhead.py (< 2 % disabled, < 10 % enabled at B=256).
+"""
+
+from . import export, log, metrics, trace
+from .metrics import REGISTRY, counter, gauge, histogram
+from .trace import disable, enable, enabled, instant, span, traced
+
+__all__ = [
+    "trace", "metrics", "export", "log",
+    "span", "traced", "instant", "enabled", "enable", "disable",
+    "counter", "gauge", "histogram", "REGISTRY",
+]

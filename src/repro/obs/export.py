@@ -1,0 +1,131 @@
+"""Turn recorded events into ndjson and Chrome ``trace_event`` JSON.
+
+Two output formats, one source of truth (the trace ring buffer plus the
+metrics registry):
+
+* **ndjson** — one json object per line via the same ``dump_dicts``
+  idiom as :func:`repro.api.results.dump_ndjson`: machine-greppable,
+  streamable, and the input format of ``python -m repro.obs.report``.
+  Span rows carry ``kind/name/ts_us/dur_us/tid/depth/attrs``; the
+  metrics snapshot is appended as ``kind: "metric"`` rows.
+* **Chrome trace JSON** — the ``trace_event`` format's complete
+  (``"ph": "X"``) events, loadable directly in ``chrome://tracing`` or
+  https://ui.perfetto.dev: drag the file in and the span tree renders
+  as a flame chart per thread.
+
+When tracing was enabled via ``REPRO_TRACE=1``, an at-exit hook (see
+:mod:`repro.obs.trace`) calls :func:`write_default_artifacts`, so any
+benchmark or example emits ``<base>.ndjson`` + ``<base>.trace.json``
+(base from ``REPRO_TRACE_OUT``, default ``repro-trace``) with no code
+changes.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from . import metrics, trace
+
+__all__ = [
+    "event_dicts", "metric_dicts", "write_ndjson", "chrome_trace",
+    "write_chrome_trace", "write_default_artifacts", "DEFAULT_BASENAME",
+]
+
+DEFAULT_BASENAME = "repro-trace"
+
+
+def event_dicts(events: list | None = None) -> list[dict]:
+    """Event tuples -> ndjson-ready dicts (timestamps in microseconds,
+    relative to the earliest event so files diff cleanly)."""
+    evs = trace.events() if events is None else events
+    if not evs:
+        return []
+    t0 = min(e[2] for e in evs)
+    rows = []
+    for kind, name, t_ns, dur_ns, tid, depth, attrs in evs:
+        row = {"kind": kind, "name": name,
+               "ts_us": (t_ns - t0) / 1000.0, "dur_us": dur_ns / 1000.0,
+               "tid": tid, "depth": depth}
+        if attrs:
+            row["attrs"] = attrs
+        rows.append(row)
+    return rows
+
+
+def metric_dicts() -> list[dict]:
+    """Metrics snapshot as ``kind: "metric"`` ndjson rows."""
+    return [{"kind": "metric", **row} for row in metrics.snapshot()]
+
+
+def write_ndjson(fh_or_path, events: list | None = None, *,
+                 include_metrics: bool = True) -> int:
+    """Stream events (and the metrics snapshot) as ndjson; returns the
+    row count.  Accepts an open file handle or a path."""
+    from ..api.results import dump_dicts  # lazy: obs must import before api
+
+    rows = event_dicts(events)
+    if trace.dropped():
+        rows.insert(0, {"kind": "meta", "name": "trace.dropped",
+                        "ts_us": 0.0, "dur_us": 0.0, "tid": 0, "depth": 0,
+                        "attrs": {"dropped": trace.dropped(),
+                                  "capacity": trace.BUFFER.capacity}})
+    if include_metrics:
+        rows.extend(metric_dicts())
+    if hasattr(fh_or_path, "write"):
+        return dump_dicts(iter(rows), fh_or_path)
+    with open(fh_or_path, "w") as fh:
+        return dump_dicts(iter(rows), fh)
+
+
+def chrome_trace(events: list | None = None, *,
+                 process_name: str = "repro") -> dict:
+    """Events -> a ``chrome://tracing`` / Perfetto-loadable document."""
+    evs = trace.events() if events is None else events
+    pid = os.getpid()
+    out = [{"ph": "M", "pid": pid, "tid": 0, "name": "process_name",
+            "args": {"name": process_name}}]
+    if not evs:
+        return {"traceEvents": out, "displayTimeUnit": "ms"}
+    t0 = min(e[2] for e in evs)
+    tids = sorted({e[4] for e in evs})
+    # Renumber thread ids densely so the timeline rows read 0, 1, 2...
+    tid_map = {t: i for i, t in enumerate(tids)}
+    for t, i in tid_map.items():
+        out.append({"ph": "M", "pid": pid, "tid": i, "name": "thread_name",
+                    "args": {"name": f"thread-{t}"}})
+    for kind, name, t_ns, dur_ns, tid, depth, attrs in evs:
+        ev = {"name": name, "cat": kind, "pid": pid, "tid": tid_map[tid],
+              "ts": (t_ns - t0) / 1000.0}
+        if kind == "span":
+            ev["ph"] = "X"
+            ev["dur"] = dur_ns / 1000.0
+        else:
+            ev["ph"] = "i"
+            ev["s"] = "t"  # thread-scoped instant
+        args = {"depth": depth}
+        if attrs:
+            args.update(attrs)
+        ev["args"] = args
+        out.append(ev)
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path, events: list | None = None) -> int:
+    """Write the Chrome trace document; returns the event count."""
+    doc = chrome_trace(events)
+    with open(path, "w") as fh:
+        json.dump(doc, fh, sort_keys=True)
+        fh.write("\n")
+    return len(doc["traceEvents"])
+
+
+def write_default_artifacts(basename: str | None = None) -> tuple[str, str]:
+    """Write ``<base>.ndjson`` and ``<base>.trace.json`` (the pair the
+    ``REPRO_TRACE=1`` at-exit hook emits); returns the two paths."""
+    base = basename or os.environ.get("REPRO_TRACE_OUT", "").strip() \
+        or DEFAULT_BASENAME
+    nd, ch = f"{base}.ndjson", f"{base}.trace.json"
+    write_ndjson(nd)
+    write_chrome_trace(ch)
+    return nd, ch

@@ -1,0 +1,35 @@
+"""Structured stdout reporter: same text, plus events under tracing.
+
+``certify.py`` and the ``launch/`` scripts used to report progress with
+raw ``print()`` — human-readable but invisible to the trace timeline.
+:func:`emit` keeps the stdout text *byte-identical by default* and, when
+tracing is enabled, additionally records a structured ``"log"`` event
+(message + typed fields) into the trace buffer, so a ``REPRO_TRACE=1``
+run exports every report line in the ndjson stream alongside the spans
+it happened between.
+
+    from repro.obs import log
+
+    log.emit(f"step {i:4d}  loss {loss:.4f}", event="train.step",
+             step=i, loss=loss)
+
+``event`` names follow the span naming scheme (``layer.noun.verb``);
+the raw text rides along as the ``text`` attribute.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from . import trace
+
+__all__ = ["emit"]
+
+
+def emit(text: str, *, event: str = "log", stream=None, **fields) -> None:
+    """Print ``text`` (stdout by default, byte-identical to the print it
+    replaces) and, when tracing is on, record it as a structured event
+    with the given fields."""
+    print(text, file=stream if stream is not None else sys.stdout)
+    if trace.enabled():
+        trace.instant(event, kind="log", text=text, **(fields or {}))

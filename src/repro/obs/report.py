@@ -1,0 +1,140 @@
+"""Summarize an exported trace: ``python -m repro.obs.report FILE``.
+
+Reads the ndjson event stream written by :func:`repro.obs.export.
+write_ndjson` (or the ``REPRO_TRACE=1`` at-exit hook) and prints, per
+span name: call count, total/mean/p50/p95/max wall time — plus the
+metric rows and any log lines.  With no FILE it summarizes the current
+in-process buffer, which makes it usable from tests and notebooks::
+
+    python -m repro.obs.report repro-trace.ndjson
+    python -m repro.obs.report repro-trace.ndjson --sort total --top 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+__all__ = ["summarize", "render", "main"]
+
+
+def _percentile(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[int(idx)]
+
+
+def summarize(rows: list[dict]) -> dict:
+    """Group ndjson rows into span aggregates, metrics, and logs."""
+    spans: dict[str, list[float]] = {}
+    metrics, logs, meta = [], [], []
+    for row in rows:
+        kind = row.get("kind")
+        if kind == "span":
+            spans.setdefault(row["name"], []).append(float(row["dur_us"]))
+        elif kind == "metric":
+            metrics.append(row)
+        elif kind == "log":
+            logs.append(row)
+        elif kind == "meta":
+            meta.append(row)
+    agg = []
+    for name, durs in spans.items():
+        durs.sort()
+        agg.append({"name": name, "count": len(durs),
+                    "total_us": sum(durs),
+                    "mean_us": sum(durs) / len(durs),
+                    "p50_us": _percentile(durs, 0.50),
+                    "p95_us": _percentile(durs, 0.95),
+                    "max_us": durs[-1]})
+    return {"spans": agg, "metrics": metrics, "logs": logs, "meta": meta}
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:9.3f}s "
+    if us >= 1e3:
+        return f"{us / 1e3:9.3f}ms"
+    return f"{us:9.1f}us"
+
+
+def render(summary: dict, *, sort: str = "total", top: int = 0,
+           fh=None) -> None:
+    out = fh if fh is not None else sys.stdout
+    key = {"total": "total_us", "mean": "mean_us", "count": "count",
+           "max": "max_us", "name": "name"}[sort]
+    spans = sorted(summary["spans"], key=lambda r: r[key],
+                   reverse=(sort != "name"))
+    if top:
+        spans = spans[:top]
+    if spans:
+        w = max(len(r["name"]) for r in spans)
+        print(f"{'span':<{w}}  {'count':>7}  {'total':>11}  {'mean':>11}"
+              f"  {'p50':>11}  {'p95':>11}  {'max':>11}", file=out)
+        for r in spans:
+            print(f"{r['name']:<{w}}  {r['count']:>7d}"
+                  f"  {_fmt_us(r['total_us']):>11}"
+                  f"  {_fmt_us(r['mean_us']):>11}"
+                  f"  {_fmt_us(r['p50_us']):>11}"
+                  f"  {_fmt_us(r['p95_us']):>11}"
+                  f"  {_fmt_us(r['max_us']):>11}", file=out)
+    else:
+        print("no spans recorded", file=out)
+    for row in summary["meta"]:
+        attrs = row.get("attrs", {})
+        print(f"! {row['name']}: {attrs}", file=out)
+    if summary["metrics"]:
+        print(file=out)
+        print("metrics:", file=out)
+        for m in summary["metrics"]:
+            labels = m.get("labels") or {}
+            label_s = ("{" + ", ".join(f"{k}={v}" for k, v in
+                                       sorted(labels.items())) + "}"
+                       if labels else "")
+            stats = {k: v for k, v in m.items()
+                     if k not in ("kind", "name", "labels", "type")}
+            print(f"  {m['name']}{label_s} [{m['type']}] {stats}", file=out)
+    if summary["logs"]:
+        print(file=out)
+        print(f"log lines: {len(summary['logs'])}", file=out)
+
+
+def _load_rows(path: str | None) -> list[dict]:
+    if path is None:
+        from . import export
+
+        return export.event_dicts() + export.metric_dicts()
+    rows = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Summarize a repro.obs ndjson trace export.")
+    parser.add_argument("file", nargs="?", default=None,
+                        help="ndjson trace file (default: the in-process "
+                             "buffer)")
+    parser.add_argument("--sort", default="total",
+                        choices=("total", "mean", "count", "max", "name"))
+    parser.add_argument("--top", type=int, default=0,
+                        help="show only the top N spans (0 = all)")
+    args = parser.parse_args(argv)
+    try:
+        rows = _load_rows(args.file)
+    except OSError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+    render(summarize(rows), sort=args.sort, top=args.top)
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via subprocess
+    raise SystemExit(main())

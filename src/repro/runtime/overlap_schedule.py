@@ -15,6 +15,7 @@ streams — exactly the effect the paper models with Eqs. 4–5.
 from __future__ import annotations
 
 import dataclasses
+import enum
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -27,6 +28,7 @@ from ..core.machine import TPU_V5E, TpuModel
 from ..core.overlap import Phase, best_bucket_count, overlap_pair
 from ..core.sharing import solve_arrays
 from ..core.topology import Topology, tpu_pod
+from ..obs import trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -359,47 +361,100 @@ def _project_capped_simplex(y: np.ndarray, total: float,
     return np.clip(y - 0.5 * (lo + hi), lb, ub)
 
 
+class StopReason(str, enum.Enum):
+    """Why :func:`relax_pod_plan` stopped descending.
+
+    A ``str`` subclass so results compare and serialize as the plain
+    reason strings (``res.stop_reason == "converged"`` holds, and json
+    export needs no special casing).
+    """
+
+    CONVERGED = "converged"            # gradient vanished or 50-step stall
+    ITERS_EXHAUSTED = "iters_exhausted"  # ran the full iteration budget
+    POINT_POLYTOPE = "point_polytope"  # lb == ub (or iters <= 0): no moves
+
+    def __str__(self) -> str:  # str(reason) -> "converged", not the repr
+        return self.value
+
+
+@dataclasses.dataclass(frozen=True)
+class PodPlanRelaxation:
+    """Full outcome of the projected-gradient relaxation.
+
+    Unpacks like the historical 3-tuple (``x, t, n_iters = relax_pod_
+    plan(...)``) and additionally records the *objective trajectory* —
+    the exact makespan of every projected iterate, starting with the
+    initial feasible projection — and the :class:`StopReason`.
+    """
+
+    x: np.ndarray
+    t: float
+    n_iters: int
+    trajectory: tuple[float, ...]
+    stop_reason: StopReason
+
+    def __iter__(self):
+        yield self.x
+        yield self.t
+        yield self.n_iters
+
+
 def relax_pod_plan(coeffs: PodStepCoefficients, *, total: float,
                    lb: Sequence[float], ub: Sequence[float],
                    iters: int = 300, softmax_tau: float | None = None
-                   ) -> tuple[np.ndarray, float, int]:
+                   ) -> PodPlanRelaxation:
     """Projected gradient descent on the analytic makespan over the
     continuous load polytope ``{sum(x) = total, lb <= x <= ub}``.
 
-    Returns ``(x_star, t_star, n_iters)`` — the best iterate by *exact*
-    makespan (the smoothed gradient only steers the descent).  The
+    Returns a :class:`PodPlanRelaxation` — unpackable as the historical
+    ``(x_star, t_star, n_iters)`` triple — holding the best iterate by
+    *exact* makespan (the smoothed gradient only steers the descent),
+    the per-iterate objective trajectory, and the stopping reason.  The
     objective is piecewise linear and the feasible set is a box-capped
     simplex, so a diminishing-step projected (sub)gradient converges to
     the balanced optimum ``a_c * x_c = const``.
     """
-    lb = np.asarray(lb, dtype=np.float64)
-    ub = np.asarray(ub, dtype=np.float64)
-    x = _project_capped_simplex(
-        np.full(len(coeffs.a), total / len(coeffs.a)), total, lb, ub)
-    t_x = float(coeffs.makespan(x))
-    best_x, best_t = x, t_x
-    span = float(np.max(ub - lb))
-    if span <= 0 or iters <= 0:       # a point polytope: nothing to move
-        return best_x, best_t, 0
-    tau = softmax_tau if softmax_tau is not None else max(
-        1e-3 * best_t, 1e-30)
-    stall = 0
-    it = 0
-    for it in range(1, iters + 1):
-        _, g = coeffs.makespan_and_grad(x, softmax_tau=tau)
-        gmax = float(np.max(np.abs(g)))
-        if gmax <= 0:
-            break
-        eta = 0.5 * span / gmax / (1.0 + 0.05 * it)
-        x = _project_capped_simplex(x - eta * g, total, lb, ub)
+    with trace.span("runtime.relax_pod_plan", iters=iters) as sp:
+        lb = np.asarray(lb, dtype=np.float64)
+        ub = np.asarray(ub, dtype=np.float64)
+        x = _project_capped_simplex(
+            np.full(len(coeffs.a), total / len(coeffs.a)), total, lb, ub)
         t_x = float(coeffs.makespan(x))
-        if t_x < best_t * (1.0 - 1e-12):
-            best_x, best_t, stall = x, t_x, 0
-        else:
-            stall += 1
-            if stall >= 50:
+        best_x, best_t = x, t_x
+        trajectory = [t_x]
+        span = float(np.max(ub - lb))
+        if span <= 0 or iters <= 0:   # a point polytope: nothing to move
+            sp.set(n_iters=0, stop_reason=StopReason.POINT_POLYTOPE.value)
+            return PodPlanRelaxation(
+                x=best_x, t=best_t, n_iters=0,
+                trajectory=tuple(trajectory),
+                stop_reason=StopReason.POINT_POLYTOPE)
+        tau = softmax_tau if softmax_tau is not None else max(
+            1e-3 * best_t, 1e-30)
+        stall = 0
+        it = 0
+        reason = StopReason.ITERS_EXHAUSTED
+        for it in range(1, iters + 1):
+            _, g = coeffs.makespan_and_grad(x, softmax_tau=tau)
+            gmax = float(np.max(np.abs(g)))
+            if gmax <= 0:
+                reason = StopReason.CONVERGED
                 break
-    return best_x, best_t, it
+            eta = 0.5 * span / gmax / (1.0 + 0.05 * it)
+            x = _project_capped_simplex(x - eta * g, total, lb, ub)
+            t_x = float(coeffs.makespan(x))
+            trajectory.append(t_x)
+            if t_x < best_t * (1.0 - 1e-12):
+                best_x, best_t, stall = x, t_x, 0
+            else:
+                stall += 1
+                if stall >= 50:
+                    reason = StopReason.CONVERGED
+                    break
+        sp.set(n_iters=it, stop_reason=reason.value, t_star=best_t)
+        return PodPlanRelaxation(
+            x=best_x, t=best_t, n_iters=it, trajectory=tuple(trajectory),
+            stop_reason=reason)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -410,7 +465,11 @@ class GradientPlanResult:
     analytic makespan; ``shortlist`` holds the candidate indices that
     were actually simulated (ranked by analytic makespan, ties broken
     toward the relaxed point); ``best_index``/``best`` identify the
-    verified winner among them."""
+    verified winner among them.  ``trajectory`` is the relaxation's
+    exact-makespan objective at every projected iterate (first entry:
+    the initial feasible projection) and ``stop_reason`` the
+    :class:`StopReason` it ended on — together they show *how* the
+    descent converged, not just where."""
 
     coefficients: PodStepCoefficients
     x_relaxed: tuple[float, ...]
@@ -420,6 +479,8 @@ class GradientPlanResult:
     shortlist: tuple[int, ...]
     best_index: int
     best: PodPlanEvaluation
+    trajectory: tuple[float, ...] = ()
+    stop_reason: StopReason = StopReason.ITERS_EXHAUSTED
 
 
 def gradient_pod_plan(terms: RooflineTerms,
@@ -468,9 +529,10 @@ def gradient_pod_plan(terms: RooflineTerms,
 
     coeffs = pod_step_coefficients(terms, topology=topo,
                                    backward_frac=backward_frac, tpu=tpu)
-    x_star, t_star, n_iters = relax_pod_plan(
+    relaxation = relax_pod_plan(
         coeffs, total=total, lb=loads.min(axis=0), ub=loads.max(axis=0),
         iters=iters, softmax_tau=softmax_tau)
+    x_star, t_star, n_iters = relaxation
     # Round: rank candidates on the analytic objective, breaking ties by
     # closeness to the relaxed optimum, then sim-verify the survivors.
     t_cand = coeffs.makespan(loads)
@@ -489,7 +551,9 @@ def gradient_pod_plan(terms: RooflineTerms,
         n_candidates=len(loads),
         shortlist=tuple(keep),
         best_index=keep[j],
-        best=evals[j])
+        best=evals[j],
+        trajectory=relaxation.trajectory,
+        stop_reason=relaxation.stop_reason)
 
 
 def best_pod_plan(terms: RooflineTerms,
