@@ -1,0 +1,111 @@
+"""Static-analysis accuracy gate: derived features vs Table II.
+
+Runs the jaxpr traffic auditor over every Table II kernel in the repo
+(:func:`repro.analysis.report.static_suite`), bridges both the derived
+and the transcribed stream counts through the same ECM model, and
+commits the comparison as ``BENCH_analysis.json``:
+
+* ``max_f_err`` — worst relative gap between the two bridged ``f``
+  values across all cells and architectures.  Exact cells must agree to
+  ~0 (their counts are integer-identical); the functional DSCAL/DAXPY
+  forms carry the documented write-allocate ambiguity and are bounded
+  by ``AMBIGUOUS_BOUND`` (15 %).  The gate in ``benchmarks/trend.py``
+  holds the artifact to that 15 % ceiling.
+* ``analysis_wall_us`` — wall time of one full-suite audit (trace +
+  walk + normalize per kernel): static analysis must stay interactive.
+* ``lint`` — the trace-contract lint sweep over the repo corpus must
+  be clean.
+
+``python benchmarks/analysis_accuracy.py --out BENCH_analysis.json``
+writes the artifact and exits nonzero when a bound breaks;
+``rows()`` feeds the same cells to ``benchmarks/run.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.analysis.report import (AMBIGUOUS_BOUND, cross_check,
+                                   lint_corpus, static_suite)
+from repro.core.table2 import ARCHS
+
+#: Architectures the committed artifact cross-checks (the two the
+#: paper's scaling study leans on; --all-archs covers the rest).
+BENCH_ARCHS = ("CLX", "ROME")
+
+
+def _suite_wall_us() -> dict[str, float]:
+    """Wall time of one full static audit of every suite kernel, µs
+    per kernel and total (trace + jaxpr walk + feature derivation)."""
+    from repro.analysis import features
+    per_kernel: dict[str, float] = {}
+    for case in static_suite():
+        fn, args = case.build()
+        t0 = time.perf_counter()
+        features(fn, *args, name=case.label, reuse=case.reuse)
+        per_kernel[case.label] = (time.perf_counter() - t0) * 1e6
+    return {"per_kernel": per_kernel,
+            "total": sum(per_kernel.values()),
+            "mean": sum(per_kernel.values()) / len(per_kernel)}
+
+
+def build_report(archs=BENCH_ARCHS) -> dict:
+    wall = _suite_wall_us()
+    cells = []
+    for arch in archs:
+        cells.extend(cross_check(arch))
+    diags = lint_corpus()
+    max_f_err = max(c["f_err"] for c in cells)
+    ok = all(c["ok"] for c in cells) and not diags
+    return {
+        "benchmark": "analysis_accuracy",
+        "ok": ok,
+        "archs": list(archs),
+        "bound": AMBIGUOUS_BOUND,
+        "max_f_err": max_f_err,
+        "n_cells": len(cells),
+        "n_exact": sum(c["exact"] for c in cells),
+        "counts_match_all_exact": all(c["counts_match"] for c in cells
+                                      if c["exact"]),
+        "analysis_wall_us": wall,
+        "lint": {"diagnostics": len(diags),
+                 "rules_fired": sorted({d.rule for d in diags})},
+        "cells": cells,
+    }
+
+
+def rows():
+    """Benchmark-driver protocol: one row per (kernel, arch) cell with
+    the per-kernel audit wall time and the bridged-f comparison."""
+    wall = _suite_wall_us()["per_kernel"]
+    for arch in BENCH_ARCHS:
+        for c in cross_check(arch):
+            yield (f"static[{c['label']}/{arch}]", wall[c["label"]], {
+                "f_static": c["f_static"], "f_table_ecm": c["f_table_ecm"],
+                "f_err": c["f_err"], "exact": c["exact"], "ok": c["ok"],
+            })
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_analysis.json")
+    ap.add_argument("--all-archs", action="store_true",
+                    help="cross-check every Table II architecture")
+    args = ap.parse_args(argv)
+    report = build_report(ARCHS if args.all_archs else BENCH_ARCHS)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"{report['n_cells']} cells over {report['archs']}  "
+          f"max f err {report['max_f_err']:.2%} "
+          f"(bound {report['bound']:.0%})  "
+          f"lint diagnostics {report['lint']['diagnostics']}  "
+          f"audit {report['analysis_wall_us']['mean']:.0f} us/kernel")
+    print(f"wrote {args.out}  (ok={report['ok']})")
+    return 0 if report["ok"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

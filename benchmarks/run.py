@@ -24,13 +24,14 @@ import traceback
 
 from repro.api import dump_dicts
 
-from . import (api_overhead, calibrate_roundtrip, desync_scaling,
-               fig6_full_domain, fig7_symmetric, fig8_error, fig9_pairings,
-               grad_calibration, hpcg_desync, obs_overhead,
+from . import (analysis_accuracy, api_overhead, calibrate_roundtrip,
+               desync_scaling, fig6_full_domain, fig7_symmetric, fig8_error,
+               fig9_pairings, grad_calibration, hpcg_desync, obs_overhead,
                placement_scaling, plan_overhead, table2_kernels,
                tpu_overlap)
 
 MODULES = {
+    "analysis": analysis_accuracy,
     "table2": table2_kernels,
     "fig6": fig6_full_domain,
     "fig7": fig7_symmetric,

@@ -35,11 +35,14 @@ HEADLINES = [
     ("BENCH_desync.json", "speedup.x", ">=", 5.0),
     ("BENCH_obs.json", "results.disabled_overhead_frac", "<", 0.02),
     ("BENCH_obs.json", "results.enabled_overhead_frac", "<", 0.10),
+    ("BENCH_analysis.json", "max_f_err", "<", 0.15),
+    ("BENCH_analysis.json", "lint.diagnostics", "<", 1),
 ]
 
 #: Artifacts whose top-level ``ok`` flag must be true.
-OK_FLAGGED = ("BENCH_api.json", "BENCH_calibrate.json", "BENCH_grad.json",
-              "BENCH_obs.json", "BENCH_placement.json", "BENCH_plan.json")
+OK_FLAGGED = ("BENCH_analysis.json", "BENCH_api.json",
+              "BENCH_calibrate.json", "BENCH_grad.json", "BENCH_obs.json",
+              "BENCH_placement.json", "BENCH_plan.json")
 
 
 def _dig(obj, path: str):

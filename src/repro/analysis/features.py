@@ -1,0 +1,145 @@
+"""LoopFeatures: normalize a traffic audit into the model's code inputs.
+
+The bridge between :mod:`repro.analysis.traffic` (total element traffic
+per call) and the registry's ECM rung (per-iteration cache-line stream
+counts).  Two policy knobs mirror the paper's Table II distinctions:
+
+* ``reuse`` — the layer condition.  ``True`` merges load streams that
+  walk the *same base buffer* (the Jacobi up/mid/down row views become
+  one stream, the LC-satisfied ``JacobiL2-*`` rows); ``False`` counts
+  every view as its own stream (the LC-violated ``JacobiL3-*`` rows).
+* ``write_allocate`` — the RFO policy.  ``True`` charges one RFO stream
+  per store whose destination is *not* an alias of an input buffer (a
+  fresh output line must be read before it is written); stores declared
+  in-place via ``input_output_aliases`` never RFO.  The policy is
+  arch-dependent in reality (non-temporal stores, Rome's write-combining)
+  — the certification cross-check documents a ≤ 15 % ``f`` bound for
+  the affected kernels instead of pretending it is exact.
+
+``derive`` is pure accounting; :func:`features` is the one-call
+``audit + derive`` convenience used by ``KernelSpec.from_static_analysis``
+and the registry's ``"static"`` resolution rung.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from .traffic import Stream, TrafficAudit, audit
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopFeatures:
+    """Per-iteration code features of one loop kernel — the exact inputs
+    :func:`repro.api.registry.from_loop_features` consumes, plus the
+    byte accounting the golden tests pin."""
+
+    name: str
+    reads: int
+    writes: int
+    rfo: int
+    flops_per_iter: float
+    bytes_per_iter: float       # actual dtypes, counted streams only
+    iters: int                  # lattice updates per audited call
+    itemsize: int               # dominant element size [B]
+    read_only: bool
+    reuse: bool
+    write_allocate: bool
+    notes: tuple[str, ...] = ()
+
+    @property
+    def streams(self) -> int:
+        return self.reads + self.writes + self.rfo
+
+    @property
+    def code_balance(self) -> float:
+        """B_c [B/F] with the audited element size; ``inf`` when the
+        kernel performs no floating-point work (DCOPY)."""
+        if self.flops_per_iter == 0:
+            return float("inf")
+        return self.bytes_per_iter / self.flops_per_iter
+
+
+def _group_by_base(streams: list[Stream]) -> dict[str, list[Stream]]:
+    groups: dict[str, list[Stream]] = {}
+    for s in streams:
+        groups.setdefault(s.base, []).append(s)
+    return groups
+
+
+def _stream_count(elements: int, iters: int) -> int:
+    """Streams implied by ``elements`` traffic over ``iters`` updates:
+    one per ``iters`` elements, rounded (halo rows make the ratio
+    slightly exceed an integer), never rounded to zero."""
+    if iters <= 0:
+        return 1
+    return max(1, round(elements / iters))
+
+
+def derive(traffic: TrafficAudit, *, reuse: bool = True,
+           write_allocate: bool = True,
+           name: str | None = None) -> LoopFeatures:
+    """Normalize an audit to per-iteration stream counts; see module doc
+    for the ``reuse`` (layer condition) and ``write_allocate`` (RFO)
+    policies."""
+    iters = traffic.iters
+    loads = list(traffic.loads)
+    stores = list(traffic.stores)
+
+    reads = 0
+    counted: list[Stream] = []
+    if reuse:
+        for group in _group_by_base(loads).values():
+            biggest = max(group, key=lambda s: s.elements)
+            reads += _stream_count(biggest.elements, iters)
+            counted.append(biggest)
+    else:
+        for s in loads:
+            reads += _stream_count(s.elements, iters)
+            counted.append(s)
+
+    writes = rfo = 0
+    for group in _group_by_base(stores).values():
+        biggest = max(group, key=lambda s: s.elements)
+        count = _stream_count(biggest.elements, iters)
+        writes += count
+        counted.append(biggest)
+        if write_allocate and not biggest.aliased:
+            rfo += count
+            counted.append(biggest)   # the RFO line travels too
+
+    itemsizes = [s.itemsize for s in counted] or [8]
+    bytes_per_iter = float(sum(
+        _stream_count(s.elements, iters) * s.itemsize
+        for s in counted)) if counted else 0.0
+    # ``counted`` lists each RFO'd store twice on purpose: the
+    # write-allocate line is charged at the store's element size.
+
+    read_only = writes == 0 and rfo == 0
+    notes = list(traffic.notes)
+    if traffic.reductions:
+        notes.append(
+            f"{traffic.reductions} grid-resident accumulator output(s) "
+            f"excluded from the store streams (register/VMEM-held)")
+    if traffic.gathers or traffic.scatters:
+        notes.append(
+            f"irregular access: {traffic.gathers} gather / "
+            f"{traffic.scatters} scatter sites — streaming counts "
+            f"understate their traffic")
+    return LoopFeatures(
+        name=name or traffic.name, reads=reads, writes=writes, rfo=rfo,
+        flops_per_iter=traffic.flops / iters if iters else 0.0,
+        bytes_per_iter=bytes_per_iter, iters=iters,
+        itemsize=max(set(itemsizes), key=itemsizes.count),
+        read_only=read_only, reuse=reuse,
+        write_allocate=write_allocate, notes=tuple(notes))
+
+
+def features(fn: Callable, *args: Any, name: str | None = None,
+             reuse: bool = True, write_allocate: bool = True
+             ) -> LoopFeatures:
+    """One-call static analysis: trace ``fn(*args)``, walk the jaxpr,
+    and return its per-iteration :class:`LoopFeatures`."""
+    return derive(audit(fn, *args, name=name), reuse=reuse,
+                  write_allocate=write_allocate, name=name)

@@ -40,9 +40,10 @@ facade dispatches to, and facade results are bit-for-bit theirs.
 from .engine import JAX_BATCH_CUTOFF, predict, simulate
 from .plan import (BatchPlan, PlacedBatchPlan, PlacedPlan, Plan,
                    ScalarPlan, SimulatePlan, compile, derive_member_seed)
-from .registry import (ResolvedSpec, from_loop_features, known_archs,
-                       known_kernels, resolve, suggest,
-                       unknown_key_error, unknown_key_message)
+from .registry import (PROVENANCES, ResolvedSpec, from_loop_features,
+                       from_static_analysis, known_archs, known_kernels,
+                       resolve, suggest, unknown_key_error,
+                       unknown_key_message)
 from .results import (BatchPrediction, DomainShare, GroupShare,
                       PlacedBatchPrediction, Prediction, Sensitivities,
                       SimulationResult, dump_dicts, dump_ndjson,
@@ -56,7 +57,8 @@ __all__ = [
     "PlacedBatchPlan", "SimulatePlan", "derive_member_seed",
     "Scenario", "ScenarioBatch", "RunSpec", "StepSpec", "Noise",
     "DEFAULT_WORK_BYTES",
-    "resolve", "ResolvedSpec", "from_loop_features", "known_kernels",
+    "resolve", "ResolvedSpec", "from_loop_features",
+    "from_static_analysis", "PROVENANCES", "known_kernels",
     "known_archs", "suggest", "unknown_key_error", "unknown_key_message",
     "Prediction", "BatchPrediction", "PlacedBatchPrediction",
     "SimulationResult", "Sensitivities", "GroupShare", "DomainShare",

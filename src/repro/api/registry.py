@@ -21,9 +21,13 @@ accepting, in order of the chain:
    :meth:`KernelSpec.from_calibration` (provenance ``"calibrated"``);
 4. an ``(f, bs)`` **pair** of floats — a synthetic one-off spec
    (provenance ``"synthetic"``);
-5. **loop features** via :func:`from_loop_features` — stream counts +
-   flops, with ``f`` *predicted* by the ECM model instead of measured
-   (provenance ``"ecm"``).
+5. **static analysis** via :func:`from_static_analysis` — the loop
+   features are *derived* from the kernel's own jaxpr by
+   :mod:`repro.analysis` and fed through the same ECM bridge
+   (provenance ``"static"``);
+6. **loop features** via :func:`from_loop_features` — hand-written
+   stream counts + flops, with ``f`` *predicted* by the ECM model
+   instead of measured (provenance ``"ecm"``).
 
 The provenance string travels into :class:`repro.api.results.Prediction`
 so every number in a result can be traced back to where its ``(f, b_s)``
@@ -47,7 +51,7 @@ from ..core.table2 import ARCHS, TABLE2, KernelSpec
 
 #: Provenance labels, in resolution-chain order.
 PROVENANCES = ("table2", "custom", "explicit", "synthetic", "calibrated",
-               "ecm")
+               "static", "ecm")
 
 
 # ---------------------------------------------------------------------------
@@ -177,22 +181,90 @@ def resolve(ref, *, arch: str | None = None,
     return out
 
 
+def _machine_for(machine: "MachineModel | str") -> MachineModel:
+    """Accept a ready :class:`MachineModel` or an architecture name
+    (looked up in the x86 machine table with a suggestion on a miss)."""
+    if isinstance(machine, MachineModel):
+        return machine
+    if isinstance(machine, str):
+        from ..core.machine import X86_MACHINES
+        if machine not in X86_MACHINES:
+            raise unknown_key_error("machine", machine, X86_MACHINES)
+        return X86_MACHINES[machine]
+    raise TypeError(
+        f"machine must be a MachineModel or an architecture name, got "
+        f"{type(machine).__name__}")
+
+
 def from_loop_features(name: str, *, reads: int, writes: int, rfo: int,
-                       flops_per_iter: float, machine: MachineModel,
-                       read_only: bool | None = None) -> ResolvedSpec:
-    """Chain step 5: build a spec from loop features alone, with ``f``
+                       flops_per_iter: float,
+                       machine: MachineModel | str,
+                       read_only: bool | None = None,
+                       bandwidth_class: str | None = None) -> ResolvedSpec:
+    """Chain step 6: build a spec from loop features alone, with ``f``
     *predicted* by the ECM model (Eqs. 1–2) and ``b_s`` taken from the
     machine's saturated-bandwidth class — the paper's "predicted using
-    the ECM model" route, no measurement required."""
+    the ECM model" route, no measurement required.
+
+    ``machine`` may be a :class:`MachineModel` or a Table II
+    architecture name; ``bandwidth_class`` overrides the automatic
+    ``read_only``/``read_write`` saturated-bandwidth selection.  Both
+    lookups fail with the registry's suggestion-bearing unknown-key
+    error rather than a bare ``KeyError``.
+    """
+    machine = _machine_for(machine)
     if read_only is None:
         read_only = writes == 0 and rfo == 0
+    bclass = bandwidth_class if bandwidth_class is not None else \
+        ("read_only" if read_only else "read_write")
+    if bclass not in machine.saturated_bw_gbs:
+        raise unknown_key_error("bandwidth class", bclass,
+                                tuple(machine.saturated_bw_gbs))
     proto = KernelSpec(name=name, body="", reads=reads, writes=writes,
                        rfo=rfo, flops_per_iter=flops_per_iter,
                        f={}, bs={}, read_only=read_only)
     pred = ecm_model.predict(proto, machine)
-    bclass = "read_only" if read_only else "read_write"
     spec = dataclasses.replace(
         proto,
         f={machine.name: pred.f},
         bs={machine.name: machine.saturated_bw_gbs[bclass]})
     return ResolvedSpec(spec=spec, provenance="ecm")
+
+
+def from_static_analysis(fn, args: Sequence = (), *,
+                         machine: "MachineModel | str | None" = None,
+                         name: str | None = None, reuse: bool = True,
+                         write_allocate: bool = True) -> ResolvedSpec:
+    """Chain step 5: derive the loop features *statically* from the
+    kernel's own jaxpr (:mod:`repro.analysis`) and feed them through
+    the ECM bridge — no hand-transcribed stream counts.
+
+    ``fn(*args)`` must be jax-traceable (bind static arguments with
+    ``functools.partial``).  ``machine=None`` predicts ``(f, b_s)`` for
+    every Table II architecture; a single machine (model or name)
+    restricts the spec to it.  ``reuse`` applies the layer condition to
+    same-base load streams and ``write_allocate`` charges RFO streams
+    for non-aliased stores — see :func:`repro.analysis.features.derive`.
+    """
+    # Lazy import: analysis sits above core and traces with jax; the
+    # registry must stay importable without it (numpy-only installs).
+    from ..analysis.features import features as _features
+    lf = _features(fn, *args, name=name, reuse=reuse,
+                   write_allocate=write_allocate)
+    if machine is None:
+        from ..core.machine import X86_MACHINES
+        machines = list(X86_MACHINES.values())
+    else:
+        machines = [_machine_for(machine)]
+    f: dict[str, float] = {}
+    bs: dict[str, float] = {}
+    last = None
+    for m in machines:
+        last = from_loop_features(
+            lf.name, reads=lf.reads, writes=lf.writes, rfo=lf.rfo,
+            flops_per_iter=lf.flops_per_iter, machine=m,
+            read_only=lf.read_only)
+        f.update(last.spec.f)
+        bs.update(last.spec.bs)
+    spec = dataclasses.replace(last.spec, f=f, bs=bs)
+    return ResolvedSpec(spec=spec, provenance="static")

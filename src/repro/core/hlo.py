@@ -22,12 +22,22 @@ from typing import Iterable
 
 from .machine import TPU_V5E, TpuModel
 
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+#: Storage width in *bits* per HLO element type — bits, not bytes, so
+#: the sub-byte types (s4/u4, the 4-bit floats) size correctly.  XLA
+#: packs them two-per-byte in dense buffers.
+_DTYPE_BITS = {
+    "s4": 4, "u4": 4, "f4e2m1fn": 4,
+    "pred": 8, "s8": 8, "u8": 8,
+    "f8e4m3fn": 8, "f8e5m2": 8, "f8e4m3": 8, "f8e3m4": 8,
+    "f8e4m3fnuz": 8, "f8e5m2fnuz": 8, "f8e4m3b11fnuz": 8, "f8e8m0fnu": 8,
+    "s16": 16, "u16": 16, "f16": 16, "bf16": 16,
+    "s32": 32, "u32": 32, "f32": 32, "tf32": 32,
+    "s64": 64, "u64": 64, "f64": 64, "c64": 64, "c128": 128,
 }
+
+#: Byte view kept for callers that reason in whole bytes (sub-byte
+#: types round up to 1 here; traffic math should use _DTYPE_BITS).
+_DTYPE_BYTES = {k: max(1, v // 8) for k, v in _DTYPE_BITS.items()}
 
 _COLLECTIVES = (
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
@@ -41,14 +51,28 @@ _GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 
 def _shape_bytes(dtype: str, dims: str) -> int:
-    nbytes = _DTYPE_BYTES.get(dtype)
-    if nbytes is None:
-        return 0
+    """Dense-buffer bytes of one ``dtype[dims]`` HLO shape.
+
+    Unknown element types raise (with the nearest known name) instead
+    of silently contributing 0 bytes — a new XLA dtype slipping through
+    would undercount every collective it appears in.
+    """
+    bits = _DTYPE_BITS.get(dtype)
+    if bits is None:
+        import difflib
+        near = difflib.get_close_matches(dtype, _DTYPE_BITS, n=1,
+                                         cutoff=0.5)
+        hint = f"; did you mean {near[0]!r}?" if near else ""
+        raise ValueError(
+            f"unknown HLO element type {dtype!r} in shape "
+            f"{dtype}[{dims}]{hint} (known types: "
+            f"{sorted(_DTYPE_BITS)}) — add it to "
+            f"repro.core.hlo._DTYPE_BITS with its storage width")
     n = 1
     for d in dims.split(","):
         if d:
             n *= int(d)
-    return n * nbytes
+    return (n * bits + 7) // 8
 
 
 def _group_size(line: str, default: int) -> int:

@@ -74,6 +74,25 @@ class KernelSpec:
                    flops_per_iter=1, f={arch: f}, bs={arch: bs})
 
     @classmethod
+    def from_static_analysis(cls, fn, args=(), *, machine=None,
+                             name: str | None = None, reuse: bool = True,
+                             write_allocate: bool = True) -> "KernelSpec":
+        """Derive a spec from the kernel's *own code*: trace
+        ``fn(*args)``, walk the jaxpr for its stream decomposition and
+        flop count (:mod:`repro.analysis`), and predict ``(f, b_s)``
+        through the ECM bridge — Table II rows without hand
+        transcription.  ``machine=None`` covers every Table II
+        architecture; ``reuse``/``write_allocate`` are the layer-
+        condition and RFO policy knobs of
+        :func:`repro.analysis.features.derive`."""
+        # Lazy import: the api facade sits above core (same pattern as
+        # the error helper in :func:`kernel` below).
+        from ..api.registry import from_static_analysis
+        return from_static_analysis(
+            fn, args, machine=machine, name=name, reuse=reuse,
+            write_allocate=write_allocate).spec
+
+    @classmethod
     def from_calibration(cls, name: str, f: Mapping[str, float],
                          bs: Mapping[str, float], *,
                          template: "KernelSpec | None" = None

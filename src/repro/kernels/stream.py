@@ -55,10 +55,26 @@ def _map_kernel(expr, scalar_ref, *refs):
     out[...] = expr(scalar_ref[0], *ins)  # scalar row: (n_scalars,)
 
 
+#: Kernels whose Table II form writes back into a read operand
+#: (``a[i] = s*a[i]``, ``a[i] = a[i] + s*b[i]``): the value maps the
+#: kernel name to the index of the overwritten array operand.
+_INPLACE_TARGET = {"dscal": 0, "daxpy": 0}
+
+
 def map_stream(name: str, scalar: jax.Array, *arrays: jax.Array,
                block_rows: int = DEFAULT_BLOCK_ROWS,
-               interpret: bool = True) -> jax.Array:
-    """Run one Table II map kernel over equal-shaped 1-D arrays."""
+               interpret: bool = True,
+               in_place: bool = False) -> jax.Array:
+    """Run one Table II map kernel over equal-shaped 1-D arrays.
+
+    ``in_place=True`` declares the paper's C semantics for the kernels
+    that overwrite a read operand (DSCAL/DAXPY): the output buffer
+    aliases that input via ``input_output_aliases``, so the written
+    cache lines are already present and no write-allocate (RFO) stream
+    exists — which is exactly what the static traffic auditor derives
+    from the alias declaration.  Functionally identical to the default
+    out-of-place form.
+    """
     expr = _MAP_EXPRS[name]
     n = arrays[0].shape[0]
     if n % LANES:
@@ -68,6 +84,17 @@ def map_stream(name: str, scalar: jax.Array, *arrays: jax.Array,
     grid = (rows // block_rows,)
     views = [a.reshape(rows, LANES) for a in arrays]
     scalar2d = jnp.atleast_1d(scalar).reshape(1, -1)
+    extra = {}
+    if in_place:
+        target = _INPLACE_TARGET.get(name)
+        if target is None:
+            raise ValueError(
+                f"in_place=True is only meaningful for the kernels that "
+                f"overwrite a read operand "
+                f"({sorted(_INPLACE_TARGET)}); {name!r} writes a "
+                f"distinct output array")
+        # +1 skips the scalar operand in the pallas input numbering.
+        extra["input_output_aliases"] = {1 + target: 0}
 
     out = pl.pallas_call(
         functools.partial(_map_kernel, expr),
@@ -80,6 +107,7 @@ def map_stream(name: str, scalar: jax.Array, *arrays: jax.Array,
         out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, LANES), arrays[0].dtype),
         interpret=interpret,
+        **extra,
     )(scalar2d, *views)
     return out.reshape(n)
 

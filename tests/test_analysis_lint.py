@@ -1,0 +1,170 @@
+"""Trace-contract linter: one seeded true positive per rule, and the
+false-positive guard over the repo's own kernels and plans."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.analysis import lint as lint_fn
+from repro.analysis.lint import (RULES, Diagnostic, lint_callable,
+                                 lint_grid, lint_plan)
+from repro.analysis.report import lint_corpus
+from repro.core import topology
+from repro.core.sharing import Group
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _batch_plan():
+    batch = api.ScenarioBatch([
+        api.Scenario.on("CLX").run("DCOPY", 12).run("DDOT2", 8),
+        api.Scenario.on("CLX").run("STREAM", 10).run("DDOT1", 6),
+    ])
+    return api.compile(batch)
+
+
+def _grid():
+    topo = topology.preset("CLX-2S")
+    d0, d1 = topo.domain_names[:2]
+    return topology.pack_placed(topo, [
+        [topology.Placed(Group(n=4, f=0.33, bs=102.4), d0)],
+        [topology.Placed(Group(n=2, f=0.5, bs=102.4), d0),
+         topology.Placed(Group(n=2, f=0.5, bs=102.4), d1)],
+    ])
+
+
+# ---------------------------------------------------------------------------
+# Seeded true positives — one per rule
+# ---------------------------------------------------------------------------
+
+
+def test_weak_const_flags_baked_scalar():
+    c = jnp.asarray(2.0)            # 0-d closure capture -> trace const
+    diags = lint_callable(lambda v: v * c, jnp.ones((8, 8)), name="fix")
+    assert [d.rule for d in diags] == ["weak-const"]
+    d = diags[0]
+    assert d.severity == "warning" and d.target == "fix"
+    assert "argument" in d.suggestion
+    assert "2.0" in d.message
+
+
+def test_bucket_bypass_flags_unbucketed_jit_boundary():
+    inner = jax.jit(lambda v: v * 2.0)
+    big = jnp.ones((100, 64), jnp.float32)    # bucket(100) = 128 != 100
+    diags = lint_callable(lambda v: inner(v) + 1.0, big, name="sweep")
+    assert any(d.rule == "bucket-bypass" for d in diags)
+    d = next(d for d in diags if d.rule == "bucket-bypass")
+    assert "128" in d.suggestion and "bucket" in d.suggestion
+
+
+def test_f64_promotion_flags_strong_scalar():
+    w = np.float64(2.0)             # strongly typed: promotes under x64
+    diags = lint_callable(lambda v: v * w, jnp.ones((8, 8), jnp.float32),
+                          name="promo")
+    assert [d.rule for d in diags] == ["f64-promotion"]
+    assert "float64" in diags[0].message
+
+
+def test_f64_promotion_flags_float32_plan_arrays():
+    plan = _batch_plan()
+    bad = dataclasses.replace(plan, n=plan.n.astype(np.float32))
+    diags = lint_plan(bad)
+    assert [d.rule for d in diags] == ["f64-promotion"]
+    assert "'n'" in diags[0].message
+
+
+def test_bucket_bypass_flags_plan_bucket_drift():
+    plan = _batch_plan()
+
+    class DriftedPlan(type(plan)):
+        # A deserialized/hand-rolled plan whose cached bucket no longer
+        # matches the substrate policy.
+        @property
+        def bucket(self):
+            return (len(self) + 1, self.n.shape[1])
+
+    bad = DriftedPlan(**{f.name: getattr(plan, f.name)
+                         for f in dataclasses.fields(plan)})
+    diags = lint_plan(bad, rules=("bucket-bypass",))
+    assert [d.rule for d in diags] == ["bucket-bypass"]
+    assert "recompile" in diags[0].suggestion
+
+
+def test_padding_escape_flags_live_masked_lane():
+    grid = _grid()
+    bad_n = grid.n.copy()
+    idx = tuple(np.argwhere(~grid.mask)[0])
+    bad_n[idx] = 3.0
+    diags = lint_grid(dataclasses.replace(grid, n=bad_n))
+    assert [d.rule for d in diags] == ["padding-escape"]
+    assert diags[0].severity == "error"
+    assert "mask" in diags[0].message
+
+
+def test_padding_escape_flags_nonfinite_occupied_cell():
+    grid = _grid()
+    bad_f = grid.f.copy()
+    idx = tuple(np.argwhere(grid.mask)[0])
+    bad_f[idx] = np.nan
+    diags = lint_grid(dataclasses.replace(grid, f=bad_f))
+    assert [d.rule for d in diags] == ["padding-escape"]
+    assert "non-finite" in diags[0].message
+
+
+def test_padding_escape_flags_placed_batch_plan():
+    topo = topology.preset("CLX-2S")
+    d0, d1 = topo.domain_names[:2]
+    scen = [api.Scenario.on("CLX").using(topo).placed("DCOPY", 4, d0),
+            api.Scenario.on("CLX").using(topo).placed("DCOPY", 2, d0)
+                                              .placed("DDOT2", 2, d1)]
+    plan = api.compile(api.ScenarioBatch(scen))
+    assert isinstance(plan, api.PlacedBatchPlan)
+    assert (~plan.grid.mask).any()          # ragged batch -> padding
+    assert lint_plan(plan) == []            # pristine plan is clean
+    bad = dataclasses.replace(plan, grid=dataclasses.replace(
+        plan.grid, n=np.where(plan.grid.mask, plan.grid.n, 5.0)))
+    diags = lint_plan(bad, rules=("padding-escape",))
+    assert any(d.rule == "padding-escape" for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# False-positive guard + surface
+# ---------------------------------------------------------------------------
+
+
+def test_repo_corpus_lints_clean():
+    assert lint_corpus() == []
+
+
+def test_clean_callable_and_plan_and_grid():
+    assert lint_callable(lambda v: v + 1.0, jnp.ones((8, 8))) == []
+    assert lint_plan(_batch_plan()) == []
+    assert lint_grid(_grid()) == []
+
+
+def test_unknown_rule_suggests():
+    with pytest.raises(KeyError, match="weak-const"):
+        lint_callable(lambda v: v, jnp.ones(4), rules=("weakconst",))
+
+
+def test_dispatcher_routes_and_rejects():
+    assert lint_fn(_grid()) == []
+    assert lint_fn(_batch_plan()) == []
+    assert lint_fn(lambda v: v + 1.0, jnp.ones(4)) == []
+    with pytest.raises(TypeError, match="cannot lint"):
+        lint_fn(42)
+
+
+def test_diagnostic_str_is_actionable():
+    d = Diagnostic(rule="weak-const", severity="warning", target="k",
+                   message="m", suggestion="s")
+    assert str(d) == "[weak-const] k: m — fix: s"
+
+
+def test_rule_catalog_complete():
+    assert set(RULES) == {"weak-const", "bucket-bypass", "f64-promotion",
+                          "padding-escape"}

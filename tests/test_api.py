@@ -173,6 +173,52 @@ def test_from_loop_features_is_ecm_route():
     assert r.spec.f["CLX"] == pytest.approx(direct.f)
 
 
+def test_from_loop_features_accepts_machine_names():
+    by_name = api.from_loop_features("mycopy", reads=1, writes=1, rfo=1,
+                                     flops_per_iter=0, machine="CLX")
+    by_model = api.from_loop_features("mycopy", reads=1, writes=1, rfo=1,
+                                      flops_per_iter=0,
+                                      machine=machine.CLX)
+    assert by_name.spec.f == by_model.spec.f
+    assert by_name.spec.bs == by_model.spec.bs
+
+
+def test_from_loop_features_unknown_machine_suggests():
+    with pytest.raises(KeyError, match=r"did you mean 'CLX'"):
+        api.from_loop_features("k", reads=1, writes=1, rfo=0,
+                               flops_per_iter=1, machine="CLX2")
+    with pytest.raises(TypeError, match="MachineModel"):
+        api.from_loop_features("k", reads=1, writes=1, rfo=0,
+                               flops_per_iter=1, machine=42)
+
+
+def test_from_loop_features_unknown_bandwidth_class_suggests():
+    with pytest.raises(KeyError, match=r"did you mean 'read_only'"):
+        api.from_loop_features("k", reads=1, writes=0, rfo=0,
+                               flops_per_iter=1, machine="CLX",
+                               bandwidth_class="readonly")
+
+
+def test_from_loop_features_bandwidth_class_override():
+    forced = api.from_loop_features("k", reads=2, writes=1, rfo=1,
+                                    flops_per_iter=1, machine="CLX",
+                                    bandwidth_class="read_only")
+    assert forced.spec.bs["CLX"] == \
+        machine.CLX.saturated_bw_gbs["read_only"]
+
+
+def test_from_static_analysis_unknown_machine_suggests():
+    import functools
+
+    import jax.numpy as jnp
+
+    from repro.kernels.stream import map_stream
+    fn = functools.partial(map_stream, "dcopy")
+    args = (jnp.float32(1.0), jnp.ones(1024, jnp.float32))
+    with pytest.raises(KeyError, match=r"did you mean 'ROME'"):
+        api.from_static_analysis(fn, args, machine="ROME2")
+
+
 def test_prelabelled_resolved_spec_passthrough():
     labelled = api.ResolvedSpec(spec=table2.kernel("DCOPY"),
                                 provenance="calibrated")

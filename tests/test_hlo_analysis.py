@@ -91,3 +91,48 @@ def test_group_size_v2_form():
     s = collective_stats(text)
     ring = 127 / 128
     assert s.wire_bytes["all-reduce"] == pytest.approx(2 * 64 * 4 * ring)
+
+
+# ---------------------------------------------------------------------------
+# _shape_bytes dtype coverage (the shape grammar's element types)
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bytes_full_width_dtypes():
+    from repro.core.hlo import _shape_bytes
+    assert _shape_bytes("f32", "256,1024") == 256 * 1024 * 4
+    assert _shape_bytes("pred", "64") == 64
+    assert _shape_bytes("s8", "10") == 10
+    assert _shape_bytes("s16", "10") == 20
+    assert _shape_bytes("u32", "10") == 40
+    assert _shape_bytes("c128", "2") == 32
+    assert _shape_bytes("f32", "") == 4           # scalar f32[]
+
+
+def test_shape_bytes_f8_variants():
+    from repro.core.hlo import _shape_bytes
+    for dt in ("f8e4m3fn", "f8e5m2", "f8e4m3", "f8e3m4",
+               "f8e4m3fnuz", "f8e5m2fnuz", "f8e4m3b11fnuz", "f8e8m0fnu"):
+        assert _shape_bytes(dt, "128") == 128, dt
+
+
+def test_shape_bytes_subbyte_types_pack():
+    from repro.core.hlo import _shape_bytes
+    assert _shape_bytes("s4", "16") == 8          # two per byte
+    assert _shape_bytes("u4", "3") == 2           # rounds up
+    assert _shape_bytes("f4e2m1fn", "8") == 4
+
+
+def test_shape_bytes_unknown_dtype_raises_with_suggestion():
+    from repro.core.hlo import _shape_bytes
+    with pytest.raises(ValueError, match=r"did you mean 'f8e4m3fn'"):
+        _shape_bytes("f8e4m3fn2", "8")
+    with pytest.raises(ValueError, match="_DTYPE_BITS"):
+        _shape_bytes("q32", "8")
+
+
+def test_collective_stats_counts_f8_traffic():
+    text = ("%ar = f8e4m3fnuz[128,256] all-reduce("
+            "f8e4m3fnuz[128,256] %x), replica_groups={{0,1}}")
+    s = collective_stats(text)
+    assert s.operand_bytes["all-reduce"] == 128 * 256
