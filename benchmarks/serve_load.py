@@ -1,0 +1,243 @@
+"""Serving-subsystem load test: coalesced vs naive per-request predict.
+
+Closed-loop load against the protocol-agnostic serving core (the plan
+cache + request coalescer of ``repro.serve``, no sockets — transport
+cost is a constant both designs would pay): C concurrent clients each
+keep one request in flight, cycling distinct numeric payloads of one
+scenario structure (the repeated-structure workload a monitoring or
+calibration client generates).  The baseline is what a single-process
+server without coalescing would do with the same requests — solve each
+arrival with its own ``api.predict(scenario)`` call, one after another.
+
+Reported per concurrency level: throughput (requests/s), p50/p99
+client latency, and the speedup over the naive baseline (acceptance:
+>= 5x at C >= 64).  The plan cache is warmed over every power-of-two
+bucket the run can touch, so the measured phase must show hit rate 1.0
+— the cache half of the serving contract.
+
+``python benchmarks/serve_load.py --out BENCH_serve.json`` writes the
+committed artifact and exits nonzero if a bound is broken.
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+import gc
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro import api
+from repro.core import backend as backend_mod
+from repro.serve import Coalescer, PlanCache, ServeConfig
+
+CONCURRENCY = (4, 16, 64)
+N_PER_LEVEL = 2048           # total requests at each concurrency level
+REPEATS = 3                  # best-of repeats (noise floor, both sides)
+SPEEDUP_BOUND = 5.0          # coalesced vs naive at C >= 64
+SPEEDUP_AT_C = 64
+
+
+def _scenarios(b: int) -> list:
+    """b distinct numeric payloads of one scenario structure: a Table
+    III-style four-kernel mix on CLX (20 cores split across DCOPY /
+    DDOT2 / DAXPY / STREAM), core counts cycling with the index.
+
+    The backend is pinned to numpy: serving ticks batch at most a few
+    hundred rows, below the jax dispatch break-even on CPU
+    (BENCH_plan.json's crossover) — an operator pins the backend for
+    the batch regime the service actually runs in.  The naive baseline
+    is unaffected (single-scenario predict always uses the scalar
+    reference engine)."""
+    base = api.Scenario.on("CLX").options(backend="numpy")
+    out = []
+    for k in range(b):
+        a = 1 + k % 8
+        c = 1 + (k // 2) % 6
+        d = 1 + (k // 3) % 5
+        out.append(base.run("DCOPY", a).run("DDOT2", c)
+                   .run("DAXPY", d).run("STREAM", 20 - a - c - d))
+    return out
+
+
+def _percentiles(samples_s: list) -> dict:
+    arr = np.sort(np.asarray(samples_s)) * 1e3
+    return {
+        "p50_ms": round(float(np.percentile(arr, 50)), 3),
+        "p99_ms": round(float(np.percentile(arr, 99)), 3),
+        "mean_ms": round(float(arr.mean()), 3),
+    }
+
+
+def _naive(scens: list, n: int) -> dict:
+    """The no-serving baseline: n sequential api.predict calls (how a
+    single-process server answers concurrent arrivals without
+    coalescing — requests serialize).  Best of REPEATS passes: both
+    sides of the speedup ratio report their quietest run, so the bound
+    measures the designs, not the machine's noise floor."""
+    best = None
+    for _ in range(REPEATS):
+        lat = []
+        for k in range(min(64, n)):      # warm dispatch paths
+            api.predict(scens[k % len(scens)])
+        for k in range(n):
+            t0 = time.perf_counter()
+            api.predict(scens[k % len(scens)])
+            lat.append(time.perf_counter() - t0)
+        wall = sum(lat)
+        if best is None or wall < best[0]:
+            best = (wall, lat)
+    wall, lat = best
+    return {"n": n, "throughput_rps": round(n / wall, 1),
+            **_percentiles(lat)}
+
+
+async def _level(coalescer: Coalescer, scens: list, C: int,
+                 n_total: int) -> dict:
+    rounds = max(4, n_total // C)
+    lat: list = []
+
+    async def client(i: int) -> None:
+        for k in range(rounds):
+            sc = scens[(i * rounds + k) % len(scens)]
+            t0 = time.perf_counter()
+            await coalescer.submit(sc)
+            lat.append(time.perf_counter() - t0)
+
+    # One unmeasured round per client: first-touch jit builds and
+    # event-loop warm-up happen here, not in the timed phase.  Then
+    # best of REPEATS measured passes (matching the naive baseline).
+    await asyncio.gather(*[client(0) for _ in range(C)])
+    n = C * rounds
+    best = None
+    for _ in range(REPEATS):
+        lat.clear()
+        a0, k0 = coalescer.counts["accepted"], coalescer._ticks
+        t0 = time.perf_counter()
+        await asyncio.gather(*[client(i) for i in range(C)])
+        wall = time.perf_counter() - t0
+        batch = ((coalescer.counts["accepted"] - a0)
+                 / max(1, coalescer._ticks - k0))
+        if best is None or wall < best[0]:
+            best = (wall, list(lat), batch)
+    wall, lat, batch = best
+    return {"C": C, "n": n, "avg_batch": round(batch, 1),
+            "throughput_rps": round(n / wall, 1), **_percentiles(lat)}
+
+
+async def _serve_phase(levels) -> tuple[list, dict]:
+    cache = PlanCache(max_entries=64)
+    template = _scenarios(1)[0]
+    # Warm every bucket a closed loop at these levels can produce, so
+    # the measured phase is a pure plan-cache-hit workload.
+    buckets = [1 << k for k in range(
+        backend_mod.bucket(max(levels)).bit_length())]
+    cache.warmup(template, buckets=buckets)
+    scens = _scenarios(256)
+    out = []
+    # tick_s=0 is "drain whatever queued": under closed-loop load every
+    # client's resubmit lands during the fan-out yield, so batches stay
+    # at C with no timed window at all (the per-level ``avg_batch``
+    # numbers are the evidence).  A timed tick only matters for open
+    # traffic that trickles in (the HTTP default keeps 1 ms).
+    async with Coalescer(ServeConfig(tick_s=0.0, max_batch=512,
+                                     max_queue=4096),
+                         cache=cache) as c:
+        before = cache.stats()
+        for C in levels:
+            out.append(await _level(c, scens, C, N_PER_LEVEL))
+        after = cache.stats()
+    served = {
+        "hits": after["hits"] - before["hits"],
+        "misses": after["misses"] - before["misses"],
+        "warm_compiles": before["misses"],
+        "entries": after["entries"],
+    }
+    lookups = served["hits"] + served["misses"]
+    served["hit_rate"] = round(served["hits"] / lookups, 4) if lookups \
+        else 0.0
+    return out, served
+
+
+def measure() -> dict:
+    scens = _scenarios(256)
+    gc_was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        naive = _naive(scens, N_PER_LEVEL)
+        levels, cache = asyncio.run(_serve_phase(CONCURRENCY))
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    for lv in levels:
+        lv["speedup_vs_naive"] = round(
+            lv["throughput_rps"] / naive["throughput_rps"], 2)
+    at_c = {lv["C"]: lv for lv in levels}
+    return {
+        "backend": "jax+numpy" if backend_mod.HAVE_JAX else "numpy",
+        "naive": naive,
+        "levels": levels,
+        "plan_cache": cache,
+        "speedup_c64": at_c[SPEEDUP_AT_C]["speedup_vs_naive"],
+    }
+
+
+def check(r: dict) -> bool:
+    return (r["speedup_c64"] >= SPEEDUP_BOUND
+            and r["plan_cache"]["hit_rate"] >= 1.0)
+
+
+def rows():
+    r = measure()
+    out = [(f"serve/naive/percall", 1e6 / r["naive"]["throughput_rps"],
+            f"rps={r['naive']['throughput_rps']};"
+            f"p99={r['naive']['p99_ms']}ms")]
+    for lv in r["levels"]:
+        out.append((f"serve/coalesced/C={lv['C']}",
+                    1e6 / lv["throughput_rps"],
+                    f"rps={lv['throughput_rps']};p50={lv['p50_ms']}ms;"
+                    f"p99={lv['p99_ms']}ms;"
+                    f"speedup={lv['speedup_vs_naive']}x"))
+    c = r["plan_cache"]
+    out.append(("serve/plan_cache/repeated_structure", 0.0,
+                f"hit_rate={c['hit_rate']};hits={c['hits']};"
+                f"misses={c['misses']}"))
+    out.append(("serve/check/bounds", 0.0,
+                f"ok={check(r)};speedup_c64>={SPEEDUP_BOUND:.0f}x"))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None, help="JSON artifact path")
+    args = ap.parse_args(argv)
+    r = measure()
+    ok = check(r)
+    report = {
+        "benchmark": "serve_load",
+        "jax": backend_mod.HAVE_JAX,
+        "bound_speedup_c64": SPEEDUP_BOUND,
+        "bound_hit_rate": 1.0,
+        "ok": ok,
+        "results": r,
+    }
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(report, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.out}  (ok={ok})")
+    print(f"naive per-request: {r['naive']['throughput_rps']} rps "
+          f"(p99 {r['naive']['p99_ms']} ms)")
+    for lv in r["levels"]:
+        print(f"coalesced C={lv['C']:>3}: {lv['throughput_rps']:>8} rps  "
+              f"p50 {lv['p50_ms']} ms  p99 {lv['p99_ms']} ms  "
+              f"({lv['speedup_vs_naive']}x vs naive)")
+    print(f"plan cache over the serving phase: {r['plan_cache']}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -37,12 +37,15 @@ HEADLINES = [
     ("BENCH_obs.json", "results.enabled_overhead_frac", "<", 0.10),
     ("BENCH_analysis.json", "max_f_err", "<", 0.15),
     ("BENCH_analysis.json", "lint.diagnostics", "<", 1),
+    ("BENCH_serve.json", "results.speedup_c64", ">=", 5.0),
+    ("BENCH_serve.json", "results.plan_cache.hit_rate", ">=", 1.0),
 ]
 
 #: Artifacts whose top-level ``ok`` flag must be true.
 OK_FLAGGED = ("BENCH_analysis.json", "BENCH_api.json",
               "BENCH_calibrate.json", "BENCH_grad.json", "BENCH_obs.json",
-              "BENCH_placement.json", "BENCH_plan.json")
+              "BENCH_placement.json", "BENCH_plan.json",
+              "BENCH_serve.json")
 
 
 def _dig(obj, path: str):

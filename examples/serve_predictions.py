@@ -1,0 +1,64 @@
+"""Prediction-as-a-service round trip, in one process.
+
+Boots the ndjson-over-HTTP serving subsystem (``repro.serve``) on an
+ephemeral port, streams a small workload through ``/v1/solve`` with the
+stdlib client, inspects ``/statsz``, and drains gracefully.  The same
+wire protocol works from any HTTP client::
+
+    python -m repro.serve --port 8080 --warmup CLX/DCOPY:12/DDOT2:8
+    printf '{"arch": "CLX", "groups": [...]}\n' | \
+        curl -sN --data-binary @- http://127.0.0.1:8080/v1/solve
+
+See docs/serving.md for the architecture (plan cache -> coalescer ->
+transport) and the full request schema.
+"""
+
+import asyncio
+
+from repro import api
+from repro.serve import App, ServeConfig, client
+
+
+def workload(n):
+    """n same-structure requests with different core splits: they
+    coalesce into batched solves through one cached plan."""
+    return [{"id": k, "arch": "CLX",
+             "groups": [{"kernel": "DCOPY", "n": 1 + k % 19},
+                        {"kernel": "DDOT2", "n": 20 - (1 + k % 19)}]}
+            for k in range(n)]
+
+
+async def main():
+    app = App(ServeConfig(tick_s=1e-3))
+    # Precompile the workload's structure over the buckets it can hit,
+    # so the serving phase below is a pure plan-cache-hit run.
+    app.cache.warmup(api.Scenario.on("CLX").run("DCOPY", 12)
+                     .run("DDOT2", 8), buckets=(1, 32))
+    port = await app.start(port=0)
+    print(f"serving on 127.0.0.1:{port}")
+
+    # The blocking stdlib client runs in a worker thread; the server
+    # (and its coalescer) lives on this loop.
+    loop = asyncio.get_running_loop()
+    rows = await loop.run_in_executor(
+        None, lambda: client.solve("127.0.0.1", port, workload(24)))
+    ok = [r for r in rows if r.get("ok")]
+    print(f"{len(ok)}/{len(rows)} requests ok; "
+          f"first total_bw = {ok[0]['total_bw']:.1f} GB/s")
+    assert len(ok) == len(rows) == 24
+    assert [r["id"] for r in rows] == list(range(24)), "order preserved"
+
+    status, stats = await loop.run_in_executor(
+        None, lambda: client.get_json("127.0.0.1", port, "/statsz"))
+    co, pc = stats["coalescer"], stats["plan_cache"]
+    print(f"statsz: accepted={co['accepted']} ticks={co['ticks']} "
+          f"plan_cache hits={pc['hits']} misses={pc['misses']}")
+    assert status == 200 and co["completed"] == 24
+    assert pc["hits"] >= 1, "warmed structure must hit, not recompile"
+
+    await app.shutdown(drain=True)
+    print("drained cleanly")
+
+
+if __name__ == "__main__":
+    asyncio.run(main())

@@ -642,6 +642,106 @@ class SimulatePlan(Plan):
 
 
 # ---------------------------------------------------------------------------
+# Cache-key hooks: structural fingerprints for plan reuse
+# ---------------------------------------------------------------------------
+
+
+def infer_verb(scenario: "Scenario | ScenarioBatch") -> str:
+    """The engine family :func:`compile` would pick for ``scenario`` when
+    no ``verb`` is given: ``"simulate"`` for program-mode scenarios and
+    noise ensembles, ``"predict"`` for group-mode scenarios.  Exposed so
+    callers that route requests *before* compiling — the serving
+    subsystem's coalescer (:mod:`repro.serve`) — cannot drift from the
+    compile-time inference."""
+    if isinstance(scenario, ScenarioBatch):
+        is_program = any(sc.steps or sc.noise is not None
+                         for sc in scenario.scenarios)
+    else:
+        is_program = isinstance(scenario, Scenario) and (
+            bool(scenario.steps) or scenario.noise is not None)
+    return "simulate" if is_program else "predict"
+
+
+def _topology_fingerprint(topo) -> tuple | None:
+    """Hashable stand-in for a topology in structure keys.
+
+    ``Topology`` objects embed machine models with dict-valued fields,
+    so they are not hashable themselves; everything the *solvers* read
+    from a topology is the ordered set of domain names and capacities,
+    which is exactly what the fingerprint keeps."""
+    if topo is None:
+        return None
+    return (topo.name, tuple((d.name, int(d.n_cores))
+                             for d in topo.domains))
+
+
+def _options_signature(sc: "Scenario") -> tuple:
+    return (tuple(sorted(sc.solver_options().items())), sc.backend,
+            sc.jax_cutoff, sc.chunk, sc.strict)
+
+
+def structure_key(scenario: "Scenario | ScenarioBatch", *,
+                  verb: str | None = None) -> tuple:
+    """A hashable fingerprint of everything :func:`compile` *traces* —
+    the plan-cache hook behind :mod:`repro.serve`.
+
+    Two scenarios with equal keys compile to interchangeable plans:
+
+    * ``verb="predict"`` keys record the structure only — arch, solver /
+      dispatch options, topology fingerprint, and per-group ``(tag,
+      kernel name, provenance, domain)`` — and deliberately **exclude
+      the numeric payload** (``n``, ``f``, ``b_s``).  A cached plan for
+      the key serves any same-structured scenario through
+      ``plan.run(cores=..., f=..., b_s=...)`` (or a ``placement=`` swap
+      on the placed path), which is the serving plan cache's contract.
+    * ``verb="simulate"`` keys include the numbers, byte counts, noise
+      block, and step sequence: the desync engine encodes programs (and
+      draws noise) at compile time, so only structurally *identical*
+      scenarios share a simulation plan.
+
+    A :class:`ScenarioBatch` keys as the tuple of its scenarios' keys.
+    ``verb=None`` infers the engine family via :func:`infer_verb`.
+    """
+    if isinstance(scenario, ScenarioBatch):
+        return tuple(structure_key(sc, verb=verb)
+                     for sc in scenario.scenarios)
+    if not isinstance(scenario, Scenario):
+        raise TypeError(
+            f"structure_key takes a Scenario or ScenarioBatch, got "
+            f"{type(scenario).__name__}")
+    sc = scenario
+    if verb is None:
+        verb = infer_verb(sc)
+    if verb not in ("predict", "simulate"):
+        raise ValueError(
+            f"unknown verb {verb!r}; expected 'predict' or 'simulate'")
+    opts = _options_signature(sc)
+    topo = _topology_fingerprint(sc.topo)
+    if verb == "predict":
+        rows = tuple((r.tag, r.resolved.name, r.resolved.provenance,
+                      r.domain) for r in sc.runs)
+        return ("predict", sc.arch, opts, topo, rows)
+    runs = tuple(
+        (r.tag, r.resolved.name, r.resolved.provenance, r.domain,
+         int(r.n), float(r.bytes), float(r.spec.f[sc.arch]),
+         float(r.spec.bs[sc.arch])) for r in sc.runs)
+    steps = tuple(
+        (s.kind, s.tag,
+         s.resolved.name if s.resolved is not None else None,
+         s.resolved.provenance if s.resolved is not None else None,
+         s.bytes, s.cost_s,
+         float(s.resolved.spec.f[sc.arch])
+         if s.resolved is not None else None,
+         float(s.resolved.spec.bs[sc.arch])
+         if s.resolved is not None else None) for s in sc.steps)
+    noise = None if sc.noise is None else (
+        sc.noise.exp_mean_s, sc.noise.seed, sc.noise.ensemble,
+        sc.noise.tag)
+    return ("simulate", sc.arch, opts, topo, runs, steps, noise,
+            sc.n_ranks, sc.rank_domains, sc.t_max)
+
+
+# ---------------------------------------------------------------------------
 # compile(): the one-time trace
 # ---------------------------------------------------------------------------
 
@@ -821,13 +921,7 @@ def compile(scenario: Scenario | ScenarioBatch, *,
     substrate — so ``plan.run()`` is just the solve.
     """
     if verb is None:
-        if isinstance(scenario, ScenarioBatch):
-            is_program = any(sc.steps or sc.noise is not None
-                             for sc in scenario.scenarios)
-        else:
-            is_program = isinstance(scenario, Scenario) and (
-                bool(scenario.steps) or scenario.noise is not None)
-        verb = "simulate" if is_program else "predict"
+        verb = infer_verb(scenario)
     if verb not in ("predict", "simulate"):
         raise ValueError(
             f"unknown verb {verb!r}; expected 'predict' or 'simulate'")

@@ -305,6 +305,57 @@ class BatchPrediction:
     def __iter__(self):
         return (self[i] for i in range(len(self)))
 
+    def rows(self, limit: int | None = None) -> "list[Prediction]":
+        """Materialize the first ``limit`` rows (all by default) in one
+        pass.  Same values as ``[self[i] for i in ...]``, but the arrays
+        are converted to Python scalars with one bulk ``tolist()`` per
+        field instead of a numpy scalar per element — the difference
+        between ~13 us and ~4 us per row, which is what the serving
+        fan-out pays on every coalesced tick."""
+        B = len(self) if limit is None else min(limit, len(self))
+        raw = self.raw
+        n_l = np.asarray(raw.n)[:B].tolist()
+        f_l = np.asarray(raw.f)[:B].tolist()
+        bs_l = np.asarray(raw.bs)[:B].tolist()
+        alpha_l = np.asarray(raw.alphas)[:B].tolist()
+        bw_l = np.asarray(raw.bw_group)[:B].tolist()
+        env_l = np.asarray(raw.b_overlap)[:B].tolist()
+        names = raw.names
+        engine = self.engine
+        # Instances are built via __new__ + __dict__.update: the frozen
+        # dataclasses store fields in __dict__, and their generated
+        # __init__ pays one object.__setattr__ per field — ~3x the cost
+        # of this path, per group, per row, per tick when serving.
+        gs_new, ds_new = GroupShare.__new__, DomainShare.__new__
+        pr_new = Prediction.__new__
+        out = []
+        for i in range(B):
+            prov_row = self.provenance[i]
+            ni, fi, bsi = n_l[i], f_l[i], bs_l[i]
+            ai, bwi = alpha_l[i], bw_l[i]
+            nmi = names[i] if names is not None else None
+            groups = []
+            bw_sum = 0.0
+            for j, p in enumerate(prov_row):
+                if not p:
+                    continue
+                g = gs_new(GroupShare)
+                g.__dict__.update(
+                    name=(nmi[j] if nmi is not None else ""),
+                    n=int(ni[j]), f=fi[j], bs=bsi[j], domain="",
+                    provenance=p, alpha=ai[j], bw=bwi[j])
+                bw_sum += bwi[j]
+                groups.append(g)
+            dom = ds_new(DomainShare)
+            dom.__dict__.update(domain="", b_overlap=env_l[i], bw=bw_sum)
+            pred = pr_new(Prediction)
+            pred.__dict__.update(
+                arch=self.archs[i], engine=engine,
+                groups=tuple(groups), domains=(dom,),
+                sensitivities=None)
+            out.append(pred)
+        return out
+
     def iter_dicts(self):
         """Lazily yield one export dict per scenario — a
         million-scenario batch streams through one row of working set

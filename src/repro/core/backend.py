@@ -213,11 +213,48 @@ def jitted(key: tuple, build: Callable[[], Callable]) -> Callable:
         return _JIT_CACHE[key]
 
 
-def cache_stats() -> dict:
-    """Hit/miss counters and entry count of the jitted-solver cache,
-    plus a per-bucket breakdown: ``"buckets"`` maps each cache-key label
-    to its ``{"hits", "misses", "compile_s"}`` (compile wall time summed
-    over rebuilds of that key)."""
+#: Additional cache-stats scopes registered by higher layers (e.g. the
+#: serving subsystem's plan cache); name → zero-arg provider returning a
+#: stats dict.  The substrate cannot import those layers, so they
+#: register themselves here at import time.
+_SCOPE_PROVIDERS: dict[str, Callable[[], dict]] = {}
+
+
+def register_cache_scope(name: str,
+                         provider: Callable[[], dict]) -> None:
+    """Register (or replace) a named cache-stats scope for
+    :func:`cache_stats`.  ``provider`` is called lazily per query;
+    ``name`` must not shadow the built-in ``"jit"``/``"all"`` scopes."""
+    if name in ("jit", "all"):
+        raise ValueError(f"scope name {name!r} is reserved")
+    _SCOPE_PROVIDERS[name] = provider
+
+
+def cache_stats(scope: str = "jit") -> dict:
+    """Hit/miss counters and entry count of the substrate's caches.
+
+    ``scope="jit"`` (the default, and the historical return shape)
+    reports the jitted-solver cache, plus a per-bucket breakdown:
+    ``"buckets"`` maps each cache-key label to its ``{"hits", "misses",
+    "compile_s"}`` (compile wall time summed over rebuilds of that key).
+    ``scope="all"`` reports every known cache once, keyed by scope name
+    (``{"jit": ..., "plan": ...}`` with :mod:`repro.serve` imported) —
+    the shape ``/statsz`` and ``repro.obs.report`` consume, with no
+    double-counting because each scope owns disjoint counters.  Any
+    other ``scope`` selects one registered scope by name."""
+    if scope == "all":
+        out = {"jit": cache_stats("jit")}
+        for name, provider in sorted(_SCOPE_PROVIDERS.items()):
+            out[name] = provider()
+        return out
+    if scope != "jit":
+        provider = _SCOPE_PROVIDERS.get(scope)
+        if provider is None:
+            from ..api.registry import unknown_key_error
+            raise unknown_key_error(
+                "cache scope", scope,
+                ["jit", "all", *sorted(_SCOPE_PROVIDERS)])
+        return provider()
     buckets: dict[str, dict] = {}
 
     def _bucket(label: str) -> dict:

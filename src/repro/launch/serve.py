@@ -1,7 +1,13 @@
-"""Serving launcher: batched greedy decoding with a KV cache.
+"""Model-decode demo launcher: batched greedy decoding with a KV cache.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --batch 4 --steps 32
+
+Naming note: this is the *transformer inference* demo (decode-loop
+latency for the reference models).  The library's serving **subsystem**
+— prediction-as-a-service over the paper's bandwidth-sharing model,
+with plan caching and request coalescing — is :mod:`repro.serve`,
+started with ``python -m repro.serve --port ...`` (docs/serving.md).
 """
 
 from __future__ import annotations

@@ -1,0 +1,49 @@
+"""Prediction-as-a-service: an async serving subsystem over compiled
+plans.
+
+This is the long-running counterpart to ``api.compile``: a
+single-process asyncio server (stdlib only) that keeps compiled plans
+hot across requests instead of paying trace/pack/jit per caller.  The
+paper's model answers "what bandwidth does each kernel get?" from just
+``(f, b_s)`` per kernel (Eqs. 1–5), which makes prediction cheap enough
+to serve interactively — the serving layers make it cheap enough to
+serve *concurrently*:
+
+* **plan cache** (:mod:`repro.serve.cache`) — compiled plans keyed by
+  scenario *structure* (:func:`repro.api.structure_key`) and
+  power-of-two batch bucket (the substrate's :func:`repro.core.
+  backend.bucket` policy), with LRU eviction, warmup, and per-key
+  hit/miss stats in the ``repro.obs`` metrics registry
+  (``serve.plan.*``; ``backend.cache_stats(scope="plan")``).
+* **request coalescer** (:mod:`repro.serve.coalesce`) — concurrent
+  requests arriving within one tick pack into a single batched
+  ``plan.run()`` and fan back out per request, with admission control
+  (queue bound → 429, per-request deadline → 504) and graceful drain.
+* **transport** (:mod:`repro.serve.http`) — ndjson-over-HTTP via an
+  asyncio server: ``python -m repro.serve --port 8787``, with
+  ``/healthz`` and ``/statsz``.  The cache + coalescer core is
+  importable and testable without sockets.
+
+Not to be confused with :mod:`repro.launch.serve`, which is the *model
+inference* demo (transformer decode-loop latency on the TPU overlap
+model).  ``python -m repro.serve`` starts this subsystem — the
+prediction service over the paper's bandwidth-sharing model;
+``examples/serve_decode.py`` drives the decode demo.
+
+See ``docs/serving.md`` for the architecture, request schema, and a
+Perfetto walkthrough of a traced request.
+"""
+
+from .cache import PlanCache, plan_cache_stats
+from .coalesce import (BadRequest, Coalescer, DeadlineExceeded, Draining,
+                       QueueFull, ServeConfig, ServeError)
+from .http import App
+from .protocol import build_response, error_response, parse_request
+
+__all__ = [
+    "App", "Coalescer", "PlanCache", "ServeConfig",
+    "ServeError", "BadRequest", "QueueFull", "Draining",
+    "DeadlineExceeded",
+    "parse_request", "build_response", "error_response",
+    "plan_cache_stats",
+]

@@ -1,0 +1,62 @@
+"""Tiny blocking client for the serving subsystem (stdlib
+``http.client``): the helper the tests, CI smoke job, and load
+benchmark share.  Not a public SDK — the wire format *is* the API
+(ndjson lines, docs/serving.md); this just saves every caller the
+chunked-transfer boilerplate.
+"""
+
+from __future__ import annotations
+
+import http.client
+import json
+from typing import Iterable, Iterator
+
+
+def get_json(host: str, port: int, path: str,
+             timeout: float = 10.0) -> tuple[int, dict]:
+    """GET a JSON endpoint (``/healthz``, ``/statsz``); returns
+    ``(status, payload)``."""
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    try:
+        conn.request("GET", path)
+        resp = conn.getresponse()
+        return resp.status, json.loads(resp.read().decode())
+    finally:
+        conn.close()
+
+
+def iter_solve(host: str, port: int, rows: Iterable[dict], *,
+               path: str = "/v1/solve",
+               timeout: float = 60.0) -> Iterator[dict]:
+    """POST request lines as one ndjson body and yield response lines
+    as the server streams them (request order)."""
+    body = "".join(json.dumps(r) + "\n" for r in rows).encode()
+    conn = http.client.HTTPConnection(host, port, timeout=timeout)
+    try:
+        conn.request("POST", path, body=body,
+                     headers={"Content-Type": "application/x-ndjson",
+                              "Content-Length": str(len(body))})
+        resp = conn.getresponse()
+        if resp.status != 200:
+            raise ConnectionError(
+                f"{path} -> {resp.status}: {resp.read().decode()!r}")
+        buf = b""
+        while True:
+            chunk = resp.read(65536)
+            if not chunk:
+                break
+            buf += chunk
+            while b"\n" in buf:
+                line, buf = buf.split(b"\n", 1)
+                if line.strip():
+                    yield json.loads(line)
+        if buf.strip():
+            yield json.loads(buf)
+    finally:
+        conn.close()
+
+
+def solve(host: str, port: int, rows: Iterable[dict],
+          **kwargs) -> list[dict]:
+    """:func:`iter_solve`, materialized."""
+    return list(iter_solve(host, port, rows, **kwargs))

@@ -1,0 +1,99 @@
+"""Plan-cache keys and batched packing for the serving subsystem.
+
+The cache contract mirrors the substrate's jit cache one level up: a
+compiled plan is reusable for any request with the same *structure*
+(:func:`repro.api.structure_key` — kernels, options, topology; not the
+numeric payload), and batch sizes round up to the substrate's
+power-of-two buckets (:func:`repro.core.backend.bucket`) so a tick of
+B requests runs on the plan compiled for ``bucket(B)`` rows.  Padding
+rows are exactly neutral (``n = 0`` groups / empty placements — the
+substrate's :func:`repro.core.backend.pad_rows` invariant), which is
+what keeps coalesced responses bit-for-bit equal to per-request solves.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+from .. import api
+from ..core import backend as backend_mod
+from ..core.topology import Placed
+
+
+def group_key(scenario: "api.Scenario", verb: str) -> tuple:
+    """The coalescing key: requests with equal keys can share one
+    batched solve.  This is exactly :func:`repro.api.structure_key`."""
+    return api.structure_key(scenario, verb=verb)
+
+
+def plan_entry(verb: str, sig: tuple, n_requests: int) -> tuple[tuple, int]:
+    """Map a structure signature plus a live batch size to the cache
+    entry that serves it: ``(entry_key, rows)`` where ``rows`` is the
+    power-of-two bucket the plan was (or will be) compiled for.
+
+    Simulation plans carry their numbers (the signature includes them),
+    and one run is shared by every identical request in the tick, so
+    the entry is bucket-free."""
+    if verb == "simulate":
+        return (sig,), 1
+    rows = backend_mod.bucket(n_requests)
+    return (sig, rows), rows
+
+
+def key_label(verb: str, scenario: "api.Scenario", rows: int) -> str:
+    """Short deterministic metrics label for one cache entry, in the
+    same spirit as the jit cache's key labels: human-scannable prefix
+    plus a structure digest."""
+    sig = api.structure_key(scenario, verb=verb)
+    digest = hashlib.blake2s(repr(sig).encode(),
+                             digest_size=5).hexdigest()
+    return f"{verb}/{scenario.arch}/B{rows}/{digest}"
+
+
+def compile_group(scenarios: "list[api.Scenario]", verb: str,
+                  rows: int) -> "api.Plan":
+    """Compile the plan that serves a structure group at ``rows``
+    capacity: the scenarios padded (by replicating the first — every
+    scenario in a group shares the structure the plan freezes) up to
+    the bucket, traced once.
+
+    Prediction groups compile through :class:`repro.api.ScenarioBatch`
+    to a batch plan whose numeric payload is swapped per tick; a
+    simulation group compiles its (single, fully-specified) scenario
+    directly."""
+    if verb == "simulate":
+        return api.compile(scenarios[0], verb="simulate")
+    padded = list(scenarios) + [scenarios[0]] * (rows - len(scenarios))
+    return api.compile(api.ScenarioBatch.of(padded), verb="predict")
+
+
+def swap_arrays(scenarios: "list[api.Scenario]", rows: int, G: int
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pack a tick's requests into the ``(rows, G)`` number arrays a
+    cached (unplaced) batch plan swaps in via ``plan.run(cores=, f=,
+    b_s=)``.  Rows past the live requests stay zero — the neutral
+    padding the jax path would add internally anyway, so the bucketed
+    solve is bit-for-bit the direct one."""
+    n = np.zeros((rows, G))
+    f = np.zeros((rows, G))
+    bs = np.zeros((rows, G))
+    for i, sc in enumerate(scenarios):
+        for j, r in enumerate(sc.runs):
+            spec = r.spec
+            n[i, j] = r.n
+            f[i, j] = spec.f[sc.arch]
+            bs[i, j] = spec.bs[sc.arch]
+    return n, f, bs
+
+
+def padded_placements(scenarios: "list[api.Scenario]", rows: int) -> tuple:
+    """Per-request placement lists padded with empty rows up to the
+    bucket, for a cached placed plan's ``run(placement=...)`` swap.
+    Empty rows pack to all-masked grid lanes — neutral by the grid
+    solver's masking contract."""
+    live = tuple(
+        tuple(Placed(r.group(sc.arch), r.domain) for r in sc.runs)
+        for sc in scenarios)
+    return live + ((),) * (rows - len(live))

@@ -1,0 +1,175 @@
+"""Wire schema: ndjson request lines in, result dicts out.
+
+One request per JSON line (the same streaming idiom as
+``api.iter_ndjson``); the transport is free to carry lines over
+anything — :mod:`repro.serve.http` streams them over chunked HTTP.
+A request line declares a scenario::
+
+    {"id": 1, "arch": "CLX",
+     "groups": [{"kernel": "DCOPY", "n": 12},
+                {"kernel": "DDOT2", "n": 8}]}
+
+and comes back as the prediction's ``to_dict()`` plus the serving
+envelope (``id`` echoed, ``ok``, ``serve_ms``).  Placed scenarios add
+``"topology"`` and per-group ``"domain"``; program-mode requests
+(``"ranks"``/``"steps"``/``"noise"``) simulate instead of predict.
+Kernels are anything the registry resolves from JSON: a Table II name,
+an ``[f, b_s]`` pair, or ``{"f": ..., "b_s": ...}``.  Errors come back
+as ``{"ok": false, "kind": "error", "status": ..., "error": ...}``
+lines, so one bad request never poisons the stream.
+
+Full field reference: docs/serving.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from .. import api
+from .coalesce import BadRequest
+
+#: Step operators accepted in ``"steps"`` lists, mapped to the
+#: Scenario program-mode builders.
+STEP_OPS = ("work", "barrier", "halo", "idle")
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One parsed request line, ready for the coalescer."""
+
+    id: object
+    verb: str
+    scenario: "api.Scenario"
+    deadline_s: float | None
+    tags: tuple[str, ...]   # simulate: per-tag skew blocks in the reply
+
+
+def _kernel_ref(spec, where: str):
+    if isinstance(spec, str):
+        return spec
+    if isinstance(spec, (list, tuple)) and len(spec) == 2:
+        return (float(spec[0]), float(spec[1]))
+    if isinstance(spec, Mapping) and "f" in spec:
+        return (float(spec["f"]), float(spec.get("b_s", spec.get("bs"))))
+    raise BadRequest(
+        f"{where}: kernel must be a name, an [f, b_s] pair, or "
+        f"{{'f': ..., 'b_s': ...}}; got {spec!r}")
+
+
+def _require(d: Mapping, field: str, where: str = "request"):
+    if field not in d:
+        raise BadRequest(f"{where}: missing required field {field!r}")
+    return d[field]
+
+
+def parse_request(d: Mapping) -> Request:
+    """Build the scenario a request line describes.
+
+    Raises :class:`BadRequest` (HTTP 400) with a field-level message on
+    anything malformed — including scenario-builder validation errors,
+    which surface with their original suggestion-bearing text."""
+    if not isinstance(d, Mapping):
+        raise BadRequest(f"request must be a JSON object, got "
+                         f"{type(d).__name__}")
+    known = {"id", "kind", "arch", "topology", "options", "deadline_ms",
+             "groups", "ranks", "domains", "noise", "steps", "t_max",
+             "tags"}
+    bad = set(d) - known
+    if bad:
+        raise BadRequest(f"unknown request fields {sorted(bad)}; "
+                         f"allowed: {sorted(known)}")
+    arch = _require(d, "arch")
+    options = dict(d.get("options") or {})
+    if "t_max" in d:
+        options["t_max"] = float(d["t_max"])
+    try:
+        sc = api.Scenario.on(arch)
+        if options:
+            sc = sc.options(**options)   # validates against the allowed set
+    except TypeError as e:
+        raise BadRequest(f"options: {e}") from None
+    try:
+        if d.get("topology") is not None:
+            sc = sc.using(d["topology"])
+        for i, g in enumerate(d.get("groups") or ()):
+            where = f"groups[{i}]"
+            kwargs = {}
+            if g.get("tag") is not None:
+                kwargs["tag"] = str(g["tag"])
+            if g.get("bytes") is not None:
+                kwargs["bytes"] = float(g["bytes"])
+            sc = sc.run(_kernel_ref(_require(g, "kernel", where), where),
+                        int(_require(g, "n", where)),
+                        domain=g.get("domain"), **kwargs)
+        if d.get("ranks") is not None:
+            sc = sc.ranks(int(d["ranks"]))
+        if d.get("noise") is not None:
+            nz = d["noise"]
+            sc = sc.with_noise(
+                float(nz.get("exp_mean_s", 5e-5)),
+                seed=int(nz.get("seed", 0)),
+                ensemble=int(nz.get("ensemble", 1)),
+                tag=str(nz.get("tag", "noise")))
+        for i, s in enumerate(d.get("steps") or ()):
+            where = f"steps[{i}]"
+            op = s.get("op", "work")
+            if op == "work":
+                kwargs = {}
+                if s.get("tag") is not None:
+                    kwargs["tag"] = str(s["tag"])
+                sc = sc.step(
+                    _kernel_ref(_require(s, "kernel", where), where),
+                    _require(s, "bytes", where), **kwargs)
+            elif op == "barrier":
+                sc = sc.barrier(**{k: s[k] for k in ("cost_s", "tag")
+                                   if k in s})
+            elif op == "halo":
+                sc = sc.halo(**{k: s[k] for k in ("cost_s", "tag")
+                                if k in s})
+            elif op == "idle":
+                sc = sc.idle(float(_require(s, "s", where)),
+                             **({"tag": str(s["tag"])} if "tag" in s
+                                else {}))
+            else:
+                raise BadRequest(
+                    f"{where}: unknown op {op!r}; expected one of "
+                    f"{list(STEP_OPS)}")
+        if d.get("domains") is not None:
+            sc = sc.on_domains([str(x) for x in d["domains"]])
+    except BadRequest:
+        raise
+    except (ValueError, TypeError, KeyError) as e:
+        raise BadRequest(str(e)) from None
+    verb = d.get("kind")
+    if verb is None:
+        verb = api.infer_verb(sc)
+    elif verb not in ("predict", "simulate"):
+        raise BadRequest(f"kind must be 'predict' or 'simulate', "
+                         f"got {verb!r}")
+    deadline_s = (float(d["deadline_ms"]) / 1e3
+                  if d.get("deadline_ms") is not None else None)
+    return Request(id=d.get("id"), verb=verb, scenario=sc,
+                   deadline_s=deadline_s,
+                   tags=tuple(str(t) for t in d.get("tags") or ()))
+
+
+def build_response(req: Request, result, elapsed_s: float) -> dict:
+    """The success envelope: ``result.to_dict()`` (the unified results
+    schema, unchanged) wrapped with the request id and serve timing."""
+    if hasattr(result, "to_dict"):
+        body = (result.to_dict(tags=req.tags)
+                if req.verb == "simulate" else result.to_dict())
+    else:                     # pragma: no cover - defensive
+        body = {"result": result}
+    return {"id": req.id, "ok": True,
+            "serve_ms": round(elapsed_s * 1e3, 3), **body}
+
+
+def error_response(req_id, exc: Exception) -> dict:
+    """The failure envelope; ``status`` carries the HTTP-ish code of
+    :class:`repro.serve.coalesce.ServeError` subclasses (500 for
+    anything else)."""
+    return {"id": req_id, "ok": False, "kind": "error",
+            "status": getattr(exc, "status", 500),
+            "error": str(exc) or type(exc).__name__}
